@@ -1,0 +1,35 @@
+"""Paper Fig. 6-7 + Algorithm 6 — cutoff points and combined crossovers."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row
+from repro.core import expected
+from repro.core.constants import BITMAP_NEXT, BITMAP_SET, BITMAP_XOR
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    t0 = time.perf_counter()
+    cs = expected.cutoff_point(BITMAP_SET, 1024, 0.9)
+    cx = expected.cutoff_point(BITMAP_XOR, 1024, 0.9)
+    dt = (time.perf_counter() - t0) * 1e6 / 2
+    rows.append(Row("fig6_cutoff_b1024_tau0.9", dt,
+                    f"set={cs} (paper 2129) xor={cx} (paper 4983) "
+                    f"ratio={cx/cs:.2f} (paper 2.3x)"))
+    r8 = expected.cutoff_point(BITMAP_XOR, 1024, 0.8) / expected.cutoff_point(
+        BITMAP_SET, 1024, 0.8)
+    rows.append(Row("fig6_cutoff_ratio_tau0.8", 0.0,
+                    f"xor/set={r8:.3f} (paper 1.47x)"))
+    t0 = time.perf_counter()
+    lo, hi = expected.combined_crossovers_normalized(64)
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(Row("alg6_combined_crossovers_b64", dt,
+                    f"next<= {lo:.3f} (paper 0.56)  xor>= {hi:.3f} (paper 0.73)"))
+    for b in (256, 1024, 4096):
+        lo, hi = expected.combined_crossovers_normalized(b)
+        rows.append(Row(f"alg6_crossovers_b{b}", 0.0,
+                        f"lo={lo:.3f} hi={hi:.3f} (paper: 'same pattern for any b>=64')"))
+    return rows

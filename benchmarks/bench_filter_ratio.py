@@ -1,0 +1,33 @@
+"""Paper Table 9 — Bitmap Filter ratio (pruned / candidates) per collection
+and threshold, measured inside AllPairs (as the paper does)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, collection
+from repro.core import cpu_algos
+from repro.core.filters import BitmapFilter
+
+TAUS = (0.5, 0.7, 0.8, 0.9)
+PAPER_UNIFORM = {0.5: 0.99, 0.7: 0.99, 0.8: 0.99, 0.9: 0.99}
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for cname, n in (("uniform", 2000), ("zipf", 1200), ("dblp", 700)):
+        col = collection(cname, n)
+        b = 128 if cname in ("zipf", "dblp") else 64
+        for tau in TAUS:
+            bf = BitmapFilter.build(col.tokens, col.lengths, "jaccard", tau, b=b)
+            stats = cpu_algos.AlgoStats()
+            t0 = time.perf_counter()
+            cpu_algos.allpairs(col, "jaccard", tau, bitmap=bf, stats=stats)
+            dt = (time.perf_counter() - t0) * 1e6
+            ratio = stats.bitmap_pruned / max(stats.candidates, 1)
+            rows.append(Row(
+                f"table9_ratio_{cname}_tau{tau}", dt,
+                f"filter_ratio={ratio:.3f} candidates={stats.candidates} "
+                f"pruned={stats.bitmap_pruned} verified={stats.verified}"))
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Fig. 10 — filter ratio per bitmap generation method (b=64, no
+cutoff).  Validates 'Bitmap-Xor consistently best at tau_j >= 0.5'."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, collection
+from repro.core import cpu_algos
+from repro.core.filters import BitmapFilter
+from repro.core.constants import BITMAP_METHODS
+
+TAUS = (0.5, 0.7, 0.9)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    col = collection("dupes", 1500)
+    for tau in TAUS:
+        ratios = {}
+        for method in BITMAP_METHODS:
+            bf = BitmapFilter.build(col.tokens, col.lengths, "jaccard", tau,
+                                    b=64, method=method, use_cutoff=False)
+            stats = cpu_algos.AlgoStats()
+            t0 = time.perf_counter()
+            cpu_algos.allpairs(col, "jaccard", tau, bitmap=bf, stats=stats)
+            dt = (time.perf_counter() - t0) * 1e6
+            ratios[method] = stats.bitmap_pruned / max(stats.candidates, 1)
+        best = max(ratios, key=ratios.get)
+        rows.append(Row(
+            f"fig10_method_ratio_tau{tau}", dt,
+            " ".join(f"{m}={r:.3f}" for m, r in ratios.items())
+            + f" best={best} (paper: xor for tau_j>=0.5)"))
+    return rows

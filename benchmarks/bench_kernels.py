@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: pure-jnp filter throughput on this CPU plus the
+analytic TPU roofline of the two Pallas kernels (SWAR/VPU vs MXU bit-plane),
+which is how the §Perf kernel choice was made."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timeit
+from repro.kernels import ops as kops
+
+# TPU v5e-class constants (assignment)
+PEAK_MXU_INT8 = 394e12   # int8 ops/s
+PEAK_VPU = 4e12          # rough vector int ops/s (8x128 x 8 ALUs x ~1GHz x cores)
+HBM_BW = 819e9
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    n, m = 2048, 2048
+    for b in (64, 256, 1024, 4096):
+        w = b // 32
+        wr = jnp.asarray(rng.integers(0, 2**32, size=(n, w), dtype=np.uint32))
+        ws = jnp.asarray(rng.integers(0, 2**32, size=(m, w), dtype=np.uint32))
+        fn = jax.jit(lambda a, bb: kops.hamming_matrix(a, bb, impl="ref"))
+        fn(wr, ws).block_until_ready()
+        us = timeit(lambda: fn(wr, ws).block_until_ready())
+        pairs_per_s = n * m / (us / 1e6)
+        # analytic per-pair cost on TPU:
+        #   SWAR: ~6 VPU ops per 32-bit word -> 6*w ops/pair
+        #   MXU : 2*b int8 MACs/pair (+ O(n*b) unpack amortised)
+        t_swar = 6 * w / PEAK_VPU
+        t_mxu = 2 * b / PEAK_MXU_INT8
+        t_mem = (2 * w * 4) / HBM_BW  # stream both bitmaps once per tile row
+        rows.append(Row(
+            f"kernel_hamming_b{b}", us,
+            f"cpu_pairs_per_s={pairs_per_s:.2e} "
+            f"tpu_roofline_pairs_per_s: swar={1/t_swar:.2e} mxu={1/t_mxu:.2e} "
+            f"pref={'mxu' if t_mxu < t_swar else 'swar'}"))
+    return rows

@@ -1,0 +1,62 @@
+"""Shared benchmark helpers: timing, cached collections, CSV rows.
+
+Each bench module exposes ``run() -> list[Row]``; ``benchmarks/run.py`` prints
+``name,us_per_call,derived`` per row.  Collections follow the paper's §5
+methodology at a scale that keeps the full suite a few minutes on this CPU
+(absolute times are not comparable to the paper's C++/GPU hardware — the
+*relative* effects, which are the paper's claims, are).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, List, Optional
+
+from repro.data.collections import (
+    dblp_like_collection,
+    uniform_collection,
+    with_duplicates,
+    zipf_collection,
+)
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timeit(fn: Callable, repeats: int = 3) -> float:
+    """Median wall time of fn() in microseconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+@functools.lru_cache(maxsize=None)
+def collection(name: str, n: int = 2000):
+    if name == "uniform":
+        return uniform_collection(n_sets=n, avg_size=10, n_tokens=220, seed=0)
+    if name == "zipf":
+        return zipf_collection(n_sets=n, avg_size=50, n_tokens=101_584, seed=0)
+    if name == "dblp":
+        return dblp_like_collection(n_sets=max(n // 2, 500), seed=0)
+    if name == "dupes":
+        base = uniform_collection(n_sets=n, avg_size=12, n_tokens=500, seed=1)
+        return with_duplicates(base, n_clusters=n // 50, cluster_size=3,
+                               jaccard=0.9, seed=2)
+    raise KeyError(name)
+
+
+COLLECTIONS = ("uniform", "zipf", "dblp")
+THRESHOLDS = (0.5, 0.6, 0.7, 0.75, 0.8, 0.85, 0.9, 0.95)

@@ -1,0 +1,42 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [module-substring ...]
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    "benchmarks.bench_expected_bounds",    # Fig. 5 / Eq. 4-6
+    "benchmarks.bench_cutoffs",            # Fig. 6-7 / Alg. 6
+    "benchmarks.bench_cpu_algos",          # Tables 5-8
+    "benchmarks.bench_filter_ratio",       # Table 9
+    "benchmarks.bench_generation_methods", # Fig. 10
+    "benchmarks.bench_precision",          # Fig. 11
+    "benchmarks.bench_device_join",        # Table 10
+    "benchmarks.bench_kernels",            # kernel roofline (DESIGN §6)
+]
+
+
+def main() -> None:
+    import importlib
+
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    for modname in MODULES:
+        if filters and not any(f in modname for f in filters):
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(modname)
+        for row in mod.run():
+            print(row.csv(), flush=True)
+        print(f"# {modname} done in {time.time()-t0:.1f}s", flush=True)
+    print(f"# total {time.time()-t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

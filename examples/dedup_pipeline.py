@@ -1,0 +1,27 @@
+"""Near-duplicate dedup of an LM corpus — the paper's technique as a
+first-class data-pipeline stage.
+
+    PYTHONPATH=src python examples/dedup_pipeline.py
+"""
+
+from repro.data.collections import uniform_collection, with_duplicates
+from repro.data.dedup import dedup_collection, dedup_documents
+
+# Document-level: shingle -> bitmap join -> union-find -> keep one per cluster.
+docs = [
+    "the quick brown fox jumps over the lazy dog",
+    "the quick brown fox jumps over the lazy cat",
+    "a completely different training document about TPUs",
+    "the quick brown fox jumps over the lazy dog!",
+    "exact set similarity joins with bitwise operations",
+] * 200  # simulate a crawl with heavy duplication
+kept, res = dedup_documents(docs, tau=0.5)
+print(f"{len(docs)} docs -> {len(kept)} after exact near-dup removal "
+      f"(pruned {res.stats.filter_ratio:.1%} of candidate pairs via bitmaps)")
+
+# Token-set-level (pre-tokenised corpora).
+base = uniform_collection(n_sets=5000, avg_size=15, n_tokens=2000, seed=3)
+col = with_duplicates(base, n_clusters=100, cluster_size=4, jaccard=0.92, seed=4)
+res = dedup_collection(col, tau=0.85, b=128)
+print(f"{col.num_sets} sets -> keep {len(res.keep)}, drop {len(res.drop)} "
+      f"({len(res.pairs)} similar pairs found)")

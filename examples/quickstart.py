@@ -1,0 +1,27 @@
+"""Quickstart: exact set-similarity self-join with the Bitmap Filter.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import from_lists, preprocess, JACCARD
+from repro.core.join import blocked_bitmap_join, naive_join
+from repro.data.collections import uniform_collection, with_duplicates
+
+# 1. Build a collection (or bring your own token sets).
+base = uniform_collection(n_sets=3000, avg_size=12, n_tokens=800, seed=0)
+col = with_duplicates(base, n_clusters=40, cluster_size=3, jaccard=0.9, seed=1)
+print(f"collection: {col.num_sets} sets, max |r| = {col.max_len}")
+
+# 2. Exact join at Jaccard >= 0.8, accelerated by the Bitmap Filter
+#    (Bitmap-Combined generation, Eq. 2 pruning, cutoff from Eq. 4-6).
+pairs, stats = blocked_bitmap_join(col, JACCARD, 0.8, b=128, return_stats=True)
+print(f"similar pairs: {len(pairs)}")
+print(f"bitmap filter pruned {stats.filter_ratio:.1%} of length-surviving pairs")
+print(f"verification precision: {stats.precision:.1%}")
+
+# 3. It is exact: identical to the naive O(N^2) oracle.
+oracle = naive_join(col, JACCARD, 0.8)
+assert np.array_equal(pairs, oracle)
+print("matches the naive oracle exactly — no false negatives, no false positives")

@@ -1,0 +1,42 @@
+"""Architecture registry: the 10 assigned configs (+ reduced smoke variants).
+
+``get(name)`` returns the full published config; ``get_reduced(name)`` a tiny
+same-family config for CPU smoke tests.  ``ARCHS`` lists the selectable
+``--arch`` ids.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig, reduced
+
+_MODULES = {
+    "smollm-135m": "repro.configs.smollm_135m",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "mamba2-2.7b": "repro.configs.mamba2_27b",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+}
+
+ARCHS: List[str] = list(_MODULES)
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_reduced(name: str, **overrides) -> ModelConfig:
+    return reduced(get(name), **overrides)
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get(n) for n in ARCHS}

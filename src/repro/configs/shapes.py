@@ -1,0 +1,85 @@
+"""Assigned input shapes and ShapeDtypeStruct builders.
+
+Four shapes per architecture (assignment):
+  train_4k     seq=4096,   global_batch=256  -> train_step
+  prefill_32k  seq=32768,  global_batch=32   -> prefill_step
+  decode_32k   seq=32768,  global_batch=128  -> serve_step (1 new token)
+  long_500k    seq=524288, global_batch=1    -> serve_step (SSM/hybrid only)
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input (tokens/labels or stub modality embeddings) — no device
+allocation, per the dry-run contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k only for sub-quadratic archs (skip noted in DESIGN.md §5)."""
+    if shape == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs as ShapeDtypeStructs (no allocation)."""
+    sp = SHAPES[shape]
+    b, s = sp.global_batch, sp.seq_len
+    i32 = jnp.int32
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    seq = 1 if sp.kind == "decode" else s
+    if cfg.frame_inputs:
+        specs["frame_embeds"] = jax.ShapeDtypeStruct((b, seq, cfg.d_model), jnp.bfloat16)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, seq), i32)
+    if sp.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, seq), i32)
+    if cfg.family == "vlm" and sp.kind != "decode":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def demo_batch(cfg: ModelConfig, batch: int, seq: int, rng=None) -> Dict[str, jnp.ndarray]:
+    """Small concrete batch for smoke tests / examples."""
+    import numpy as np
+
+    rng = rng or np.random.default_rng(0)
+    out: Dict[str, jnp.ndarray] = {}
+    if cfg.frame_inputs:
+        out["frame_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, seq, cfg.d_model)).astype("float32"), jnp.bfloat16)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32)
+    out["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32)
+    if cfg.family == "vlm":
+        out["image_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.num_image_tokens, cfg.d_model)).astype("float32"),
+            jnp.bfloat16)
+    return out

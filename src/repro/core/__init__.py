@@ -1,0 +1,26 @@
+"""The paper's primary contribution: the Bitmap Filter and exact set
+similarity joins built on it (Sandes, Teodoro & Melo, 2017).
+
+Public surface:
+
+* :mod:`repro.core.bitmap` — Bitmap-Set / Xor / Next / Combined generation.
+* :mod:`repro.core.bounds` — Eq. 2 upper bound + Table 1/2 conversions.
+* :mod:`repro.core.expected` — Eq. 4-6 expected bounds, cutoff ω(b, τ).
+* :mod:`repro.core.join` — naive oracle, blocked device join, ring join.
+* :mod:`repro.core.cpu_algos` — faithful AllPairs/PPJoin/GroupJoin/AdaptJoin.
+"""
+
+from repro.core.collection import Collection, from_lists, pad_collection, preprocess
+from repro.core.constants import (
+    BITMAP_COMBINED,
+    BITMAP_METHODS,
+    BITMAP_NEXT,
+    BITMAP_SET,
+    BITMAP_XOR,
+    COSINE,
+    DICE,
+    JACCARD,
+    OVERLAP,
+    PAD_TOKEN,
+    SIM_FUNCTIONS,
+)

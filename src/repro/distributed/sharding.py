@@ -1,0 +1,118 @@
+"""Activation sharding constraints, mesh-agnostic.
+
+Model code stays free of mesh objects: it annotates activations with logical
+dim roles ("batch" / "tp" / None) via :func:`constrain`; the launcher binds a
+mesh with :func:`activation_sharding`.  Without an active context the calls
+are no-ops (unit tests, single-device runs).
+
+Why: XLA's sharding propagation is good but not clairvoyant through deep
+``while`` nests (layer scan x flash-attention scans).  Pinning the batch axis
+on the per-layer activations and the head/ff axes at projection outputs keeps
+every loop body sharded the way the top-level specs intend.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+_TLS = threading.local()
+
+
+@contextmanager
+def activation_sharding(mesh, batch_axes: Tuple[str, ...] = ("pod", "data"),
+                        tp_axis: str = "model", seq_parallel: bool = False):
+    """seq_parallel: shard the *sequence* dim of the residual stream over the
+    TP axis between blocks (Megatron-SP). Turns the per-layer dx all-reduces
+    into reduce-scatter/all-gather pairs and shards norm/elementwise work."""
+    prev = getattr(_TLS, "ctx", None)
+    baxes = tuple(a for a in batch_axes if a in mesh.shape)
+    tp = tp_axis if tp_axis in mesh.shape else None
+    _TLS.ctx = (mesh, baxes, tp, bool(seq_parallel))
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def current_context():
+    return getattr(_TLS, "ctx", None)
+
+
+def constrain(x, dims: Sequence[Optional[str]]):
+    """Apply with_sharding_constraint according to logical dim roles.
+
+    dims: per-axis role — "batch" (shard over the batch axes), "tp" (shard
+    over the model axis), or None (replicate).  Divisibility is checked; a
+    non-divisible dim silently replicates (e.g. 3 KV heads on a 16-way TP
+    axis).
+    """
+    ctx = current_context()
+    if ctx is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh, baxes, tp = ctx[0], ctx[1], ctx[2]
+    bsize = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    spec = []
+    for size, role in zip(x.shape, dims):
+        if role == "batch" and baxes and size % bsize == 0:
+            spec.append(baxes)
+        elif role == "tp" and tp and size % mesh.shape[tp] == 0:
+            spec.append(tp)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_residual(x):
+    """Between-block residual-stream constraint: (batch, [seq over TP], None).
+
+    With ``seq_parallel`` enabled in the active context, dim 1 (sequence)
+    shards over the TP axis when divisible; otherwise replicated (decode
+    steps with S=1 fall back automatically).
+    """
+    ctx = current_context()
+    if ctx is None:
+        return x
+    seq_par = len(ctx) > 3 and ctx[3]
+    if seq_par and x.ndim >= 2:
+        return constrain(x, ("batch", "tp") + (None,) * (x.ndim - 2))
+    return constrain(x, ("batch",) + (None,) * (x.ndim - 1))
+
+
+def attn_partition(q, k, v, num_heads: int, num_kv_heads: int):
+    """Attention operand partitioning with a context-parallel fallback.
+
+    * heads divisible by the TP axis: classic head-parallel q/k/v.
+    * otherwise (e.g. 9 heads on a 16-way axis): shard the *q sequence* over
+      TP with k/v replicated — every shard computes its slice of attention
+      rows against the full K/V with no partial-sum collectives.  Without
+      this, XLA shards the head_dim contraction and all-reduces every
+      (q-block, kv-block) score tile (measured: 4.3e12 B/step on
+      smollm prefill_32k).
+    """
+    ctx = current_context()
+    if ctx is None:
+        return q, k, v
+    mesh, _, tp = ctx[0], ctx[1], ctx[2]
+    if tp is None:
+        return q, k, v
+    tp_size = mesh.shape[tp]
+    if num_kv_heads % tp_size == 0:
+        q = constrain(q, ("batch", None, "tp", None))
+        k = constrain(k, ("batch", None, "tp", None))
+        v = constrain(v, ("batch", None, "tp", None))
+    elif num_heads % tp_size == 0:
+        q = constrain(q, ("batch", None, "tp", None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+    else:
+        q = constrain(q, ("batch", "tp", None, None))
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+    return q, k, v

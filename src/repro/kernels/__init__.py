@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the Bitmap Filter hot spots.
+
+* :mod:`repro.kernels.bitmap_filter` — tiled SWAR xor+popcount Hamming /
+  fused candidate kernels (pl.pallas_call + BlockSpec VMEM tiling).
+* :mod:`repro.kernels.bitplane` — MXU int8 bit-plane reformulation.
+* :mod:`repro.kernels.ops` — jit'd public wrappers with impl dispatch.
+* :mod:`repro.kernels.ref` — pure-jnp oracles for validation.
+"""

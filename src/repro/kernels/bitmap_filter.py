@@ -1,0 +1,181 @@
+"""Pallas TPU kernels for the Bitmap Filter hot spot.
+
+The paper's inner loop — ``popcount(b_r XOR b_s)`` for every candidate pair —
+is re-tiled for the TPU memory hierarchy:
+
+* grid ``(NR/TR, NS/TS)``; each program owns one ``(TR, TS)`` output tile;
+* BlockSpecs stage ``(TR, W)`` and ``(TS, W)`` packed ``uint32`` bitmap blocks
+  (plus the two length vectors) from HBM into VMEM;
+* the Hamming accumulation loops over the ``W = b/32`` words with a SWAR
+  popcount on the 8x128 VPU (TPUs have no scalar POPCNT — the bit-slice
+  reduction is the vector-unit equivalent);
+* the *fused* candidate kernel additionally evaluates the Eq. 2 overlap upper
+  bound, the equivalent-overlap threshold (Table 1), and the self-join
+  upper-triangle mask, emitting a compact ``bool`` tile. This fusion is the
+  TPU analogue of the paper's GPU kernel (Algorithm 8): filter evaluation
+  never leaves the core's registers/VMEM, and only a 1-bit verdict per pair
+  is written back to HBM.
+
+Default tiles: ``TR = TS = 256`` — the ``(256, 256)`` int32 accumulator is
+256 KiB, both bitmap blocks at b=4096 are 128 KiB each, everything fits VMEM
+(~16 MiB) with headroom; the 256-lane minor dim is a multiple of the 128-wide
+vector lanes and MXU tiles.
+
+Correctness of every kernel is asserted against ``repro.kernels.ref`` oracles
+in ``tests/test_kernels.py`` (interpret mode on CPU; shape/dtype sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.constants import COSINE, DICE, JACCARD, OVERLAP
+
+DEFAULT_TILE = 256
+
+
+def _popcount32(v: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount on uint32 lanes (VPU-friendly, branch-free)."""
+    v = v - ((v >> jnp.uint32(1)) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> jnp.uint32(2)) & jnp.uint32(0x33333333))
+    v = (v + (v >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> jnp.uint32(24)
+
+
+def _tile_hamming(r_words: jnp.ndarray, s_words: jnp.ndarray) -> jnp.ndarray:
+    """(TR, W) x (TS, W) uint32 -> (TR, TS) int32 Hamming distances.
+
+    Loops over words so the (TR, TS, W) cross-product is never materialised;
+    the accumulator tile stays resident in registers/VMEM.
+    """
+    tr, w = r_words.shape
+    ts = s_words.shape[0]
+
+    def body(k, acc):
+        rw = jax.lax.dynamic_index_in_dim(r_words, k, 1, keepdims=False)  # (TR,)
+        sw = jax.lax.dynamic_index_in_dim(s_words, k, 1, keepdims=False)  # (TS,)
+        x = rw[:, None] ^ sw[None, :]
+        return acc + _popcount32(x).astype(jnp.int32)
+
+    acc0 = jnp.zeros((tr, ts), dtype=jnp.int32)
+    return jax.lax.fori_loop(0, w, body, acc0)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: raw Hamming-distance tile kernel
+# ---------------------------------------------------------------------------
+
+def _hamming_kernel(r_ref, s_ref, out_ref):
+    out_ref[...] = _tile_hamming(r_ref[...], s_ref[...])
+
+
+def hamming_matrix_pallas(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    *,
+    tile_r: int = DEFAULT_TILE,
+    tile_s: int = DEFAULT_TILE,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """All-pairs Hamming distance. uint32[NR, W] x uint32[NS, W] -> int32[NR, NS].
+
+    NR/NS must be multiples of the tile sizes (ops.py pads).
+    """
+    nr, w = words_r.shape
+    ns, _ = words_s.shape
+    grid = (nr // tile_r, ns // tile_s)
+    return pl.pallas_call(
+        _hamming_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_s, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, tile_s), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nr, ns), jnp.int32),
+        interpret=interpret,
+    )(words_r, words_s)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: fused candidate kernel (bound + threshold + triangle mask)
+# ---------------------------------------------------------------------------
+
+def _required_overlap(sim: str, tau: float, lr: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
+    lr = lr.astype(jnp.float32)
+    ls = ls.astype(jnp.float32)
+    if sim == OVERLAP:
+        return jnp.full_like(lr + ls, float(tau))
+    if sim == JACCARD:
+        return (tau / (1.0 + tau)) * (lr + ls)
+    if sim == COSINE:
+        return tau * jnp.sqrt(lr * ls)
+    if sim == DICE:
+        return (tau / 2.0) * (lr + ls)
+    raise ValueError(sim)
+
+
+def _make_candidate_kernel(sim: str, tau: float, self_join: bool, tile_r: int, tile_s: int,
+                           cutoff: int):
+    def kernel(r_ref, s_ref, lr_ref, ls_ref, out_ref):
+        ham = _tile_hamming(r_ref[...], s_ref[...])
+        lr = lr_ref[...].astype(jnp.int32)  # (TR,)
+        ls = ls_ref[...].astype(jnp.int32)  # (TS,)
+        lsum = lr[:, None] + ls[None, :]
+        ub = (lsum - ham) // 2
+        # Tighten: overlap can never exceed min(|r|, |s|).
+        ub = jnp.minimum(ub, jnp.minimum(lr[:, None], ls[None, :]))
+        need = _required_overlap(sim, tau, lr[:, None], ls[None, :])
+        passed = ub.astype(jnp.float32) >= need
+        # Cutoff (Alg. 7): past the precision cliff the bitmap test is void —
+        # such pairs must be *kept* (conservative), not pruned.
+        over_cut = (lr[:, None] > cutoff) | (ls[None, :] > cutoff)
+        cand = passed | over_cut
+        # Padding rows have length 0 -> never candidates.
+        cand &= (lr[:, None] > 0) & (ls[None, :] > 0)
+        if self_join:
+            gi = pl.program_id(0) * tile_r + jax.lax.iota(jnp.int32, tile_r)
+            gj = pl.program_id(1) * tile_s + jax.lax.iota(jnp.int32, tile_s)
+            cand &= gi[:, None] < gj[None, :]
+        out_ref[...] = cand
+
+    return kernel
+
+
+def candidate_matrix_pallas(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    *,
+    sim: str,
+    tau: float,
+    self_join: bool,
+    cutoff: int = 1 << 30,
+    tile_r: int = DEFAULT_TILE,
+    tile_s: int = DEFAULT_TILE,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused bitmap-filter verdict tile: bool[NR, NS] candidate mask."""
+    nr, w = words_r.shape
+    ns, _ = words_s.shape
+    grid = (nr // tile_r, ns // tile_s)
+    kernel = _make_candidate_kernel(sim, float(tau), self_join, tile_r, tile_s, int(cutoff))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_s, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_r,), lambda i, j: (i,)),
+            pl.BlockSpec((tile_s,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile_r, tile_s), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nr, ns), jnp.bool_),
+        interpret=interpret,
+    )(words_r, words_s, len_r, len_s)

@@ -1,0 +1,130 @@
+"""Fused flash-attention forward kernel (Pallas, TPU target).
+
+This is the §Perf F lever for the dominant roofline term of every dense LM
+cell: at the XLA level, blockwise attention round-trips the f32 score /
+probability tiles through HBM (~S²·H·10 B per layer per pass — see
+EXPERIMENTS.md §Roofline).  This kernel keeps the whole
+QKᵀ → online-softmax → PV pipeline in VMEM: HBM traffic collapses to the
+O(S·D) operand/output streams.
+
+Layout: grid ``(B, H, nq)``; each program owns one (Cq, D) output block for
+one (batch, head):
+
+* q block   (Cq, D)   via BlockSpec (streamed per grid step);
+* k/v rows  (Sk, D)   for the matching **KV head** (GQA via index_map
+  ``h // group``) resident in VMEM — 8 MB at S=32k, D=128, bf16, within the
+  ~16 MB budget; longer contexts tile kv with an extra grid dim;
+* inner ``fori_loop`` over kv chunks with causal block skipping
+  (lower-triangle schedule — upper blocks are never touched, which also
+  halves FLOPs vs the masked-rectangle jnp path).
+
+Forward-only by design: training keeps the custom-VJP jnp path (whose
+backward is itself blockwise); serving/prefill — where the memory term binds
+hardest — uses this kernel on TPU.  Validated against
+``repro.models.layers.flash_attention`` in interpret mode
+(tests/test_kernels.py::test_flash_kernel_*).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _make_kernel(sq: int, sk: int, q_chunk: int, kv_chunk: int, causal: bool,
+                 scale: float):
+    nk = sk // kv_chunk
+
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        qi = pl.program_id(2)
+        q = q_ref[0, :, 0, :].astype(jnp.float32)              # (Cq, D)
+        q_pos = qi * q_chunk + jax.lax.iota(jnp.int32, q_chunk)
+
+        def body(kj, acc):
+            o, m, l = acc
+            k_blk = pl.load(k_ref, (0, pl.dslice(kj * kv_chunk, kv_chunk),
+                                    0, slice(None))).astype(jnp.float32)
+            v_blk = pl.load(v_ref, (0, pl.dslice(kj * kv_chunk, kv_chunk),
+                                    0, slice(None)))
+            s = jax.lax.dot_general(
+                q, k_blk, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale     # (Cq, Ck)
+            if causal:
+                k_pos = kj * kv_chunk + jax.lax.iota(jnp.int32, kv_chunk)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jax.lax.dot_general(
+                p.astype(v_blk.dtype), v_blk, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return (o * alpha[:, None] + pv, m_new, l_new)
+
+        d = q_ref.shape[-1]  # head dim
+        o0 = jnp.zeros((q_chunk, d), jnp.float32)
+        m0 = jnp.full((q_chunk,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((q_chunk,), jnp.float32)
+        if causal:
+            # lower-triangle schedule: kv blocks strictly above the diagonal
+            # are never visited (static upper bound per q block).
+            hi = (qi + 1) * q_chunk  # last kv index needed + 1
+            n_valid = (hi + kv_chunk - 1) // kv_chunk
+            o, m, l = jax.lax.fori_loop(0, n_valid, body, (o0, m0, l0))
+        else:
+            o, m, l = jax.lax.fori_loop(0, nk, body, (o0, m0, l0))
+        o_ref[0, :, 0, :] = (o / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+    return kernel
+
+
+def flash_attention_fwd_pallas(
+    q: jnp.ndarray,            # (B, Sq, H, D)
+    k: jnp.ndarray,            # (B, Sk, KV, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_chunk: int = 256,
+    kv_chunk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    assert h % kv == 0
+    g = h // kv
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    while sq % q_chunk:
+        q_chunk //= 2
+    while sk % kv_chunk:
+        kv_chunk //= 2
+    nq = sq // q_chunk
+    kernel = _make_kernel(sq, sk, q_chunk, kv_chunk, causal, d ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq),
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, 1, d), lambda bb, hh, i: (bb, i, hh, 0)),
+            pl.BlockSpec((1, sk, 1, d), lambda bb, hh, i, g=g: (bb, 0, hh // g, 0)),
+            pl.BlockSpec((1, sk, 1, d), lambda bb, hh, i, g=g: (bb, 0, hh // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, 1, d), lambda bb, hh, i: (bb, i, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out
+
+
+def analytic_hbm_bytes(b, s, h, d, dtype_bytes=2) -> dict:
+    """Roofline accounting for EXPERIMENTS §Perf F: fused vs unfused."""
+    operands = 3 * b * s * h * d * dtype_bytes + b * s * h * d * dtype_bytes
+    # unfused XLA path: s(f32) + p(bf16->dot copy) + pv(f32) tiles round-trip
+    unfused_tiles = b * h * s * s * (4 + 2 + 4)
+    return {"fused": operands, "unfused": operands + unfused_tiles,
+            "ratio": (operands + unfused_tiles) / operands}

@@ -1,0 +1,147 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles tile padding, implementation dispatch, and the CPU story:
+
+* on TPU the compiled Pallas kernels run natively;
+* on CPU ``interpret=True`` executes the kernel bodies in Python — correct but
+  slow, used by the test suite;
+* ``impl='ref'`` (the pure-jnp oracle) is the default *performance* path on
+  CPU so that benchmarks and the data pipeline stay fast in this container.
+
+``impl='auto'`` resolves to: Pallas-SWAR for b < 512, Pallas-MXU-bitplane for
+b >= 512 on TPU; ref on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitmap import popcount_rows, unpack_bits
+from repro.kernels import bitplane, bitmap_filter, ref
+
+_TILE = bitmap_filter.DEFAULT_TILE
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(a: jnp.ndarray, multiple: int, fill=0) -> jnp.ndarray:
+    n = a.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return a
+    pad_widths = [(0, rem)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad_widths, constant_values=fill)
+
+
+def resolve_impl(impl: str, b: int) -> str:
+    if impl != "auto":
+        return impl
+    if not _on_tpu():
+        return "ref"
+    return "mxu" if b >= 512 else "swar"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret", "tile"))
+def hamming_matrix(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    tile: int = _TILE,
+) -> jnp.ndarray:
+    """All-pairs Hamming distance between packed bitmaps -> int32[NR, NS]."""
+    nr, w = words_r.shape
+    ns, _ = words_s.shape
+    b = 32 * w
+    impl = resolve_impl(impl, b)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if impl == "ref":
+        return ref.hamming_matrix_ref(words_r, words_s)
+    if impl == "ref_mxu":
+        return ref.bitplane_hamming_ref(
+            unpack_bits(words_r).astype(jnp.int8),
+            unpack_bits(words_s).astype(jnp.int8),
+            popcount_rows(words_r), popcount_rows(words_s))
+    pr = _pad_rows(words_r, tile)
+    ps = _pad_rows(words_s, tile)
+    if impl == "swar":
+        out = bitmap_filter.hamming_matrix_pallas(pr, ps, tile_r=tile, tile_s=tile,
+                                                  interpret=interpret)
+    elif impl == "mxu":
+        planes_r = unpack_bits(pr).astype(jnp.int8)
+        planes_s = unpack_bits(ps).astype(jnp.int8)
+        out = bitplane.bitplane_hamming_pallas(
+            planes_r, planes_s, popcount_rows(pr), popcount_rows(ps),
+            tile_r=tile, tile_s=tile, interpret=interpret)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return out[:nr, :ns]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sim", "tau", "self_join", "cutoff", "impl", "interpret", "tile"),
+)
+def candidate_matrix(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    sim: str,
+    tau: float,
+    self_join: bool,
+    cutoff: int = 1 << 30,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    tile: int = _TILE,
+) -> jnp.ndarray:
+    """Fused bitmap-filter verdicts -> bool[NR, NS] candidate mask."""
+    nr, w = words_r.shape
+    ns, _ = words_s.shape
+    b = 32 * w
+    impl = resolve_impl(impl, b)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if impl == "ref":
+        return ref.candidate_matrix_ref(
+            words_r, words_s, len_r, len_s, sim=sim, tau=tau,
+            self_join=self_join, cutoff=cutoff)
+    if impl == "ref_mxu":
+        ham = hamming_matrix(words_r, words_s, impl="ref_mxu")
+        lr = len_r.astype(jnp.int32)[:, None]
+        ls = len_s.astype(jnp.int32)[None, :]
+        ub = jnp.minimum((lr + ls - ham) // 2, jnp.minimum(lr, ls))
+        need = ref.required_overlap_ref(sim, tau, lr, ls)
+        cand = (ub.astype(jnp.float32) >= need) | (lr > cutoff) | (ls > cutoff)
+        cand &= (lr > 0) & (ls > 0)
+        if self_join:
+            cand &= jnp.arange(words_r.shape[0])[:, None] < jnp.arange(words_s.shape[0])[None, :]
+        return cand
+    if impl == "mxu":
+        # MXU path computes Hamming on the systolic array, then applies the
+        # (cheap, elementwise) verdict outside the kernel.
+        ham = hamming_matrix(words_r, words_s, impl="mxu", interpret=interpret, tile=tile)
+        lr = len_r.astype(jnp.int32)[:, None]
+        ls = len_s.astype(jnp.int32)[None, :]
+        ub = jnp.minimum((lr + ls - ham) // 2, jnp.minimum(lr, ls))
+        need = ref.required_overlap_ref(sim, tau, lr, ls)
+        cand = (ub.astype(jnp.float32) >= need) | (lr > cutoff) | (ls > cutoff)
+        cand &= (lr > 0) & (ls > 0)
+        if self_join:
+            cand &= jnp.arange(nr)[:, None] < jnp.arange(ns)[None, :]
+        return cand
+    pr = _pad_rows(words_r, tile)
+    ps = _pad_rows(words_s, tile)
+    plr = _pad_rows(len_r.astype(jnp.int32), tile)
+    pls = _pad_rows(len_s.astype(jnp.int32), tile)
+    out = bitmap_filter.candidate_matrix_pallas(
+        pr, ps, plr, pls, sim=sim, tau=tau, self_join=self_join,
+        cutoff=cutoff, tile_r=tile, tile_s=tile, interpret=interpret)
+    return out[:nr, :ns]

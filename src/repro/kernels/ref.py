@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels are validated against
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts exact equality —
+all kernels here are integer/boolean, so there is no tolerance).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bitmap import popcount32, unpack_bits
+from repro.core.constants import COSINE, DICE, JACCARD, OVERLAP
+
+
+def hamming_matrix_ref(words_r: jnp.ndarray, words_s: jnp.ndarray) -> jnp.ndarray:
+    """uint32[NR, W] x uint32[NS, W] -> int32[NR, NS]."""
+    x = words_r[:, None, :] ^ words_s[None, :, :]
+    return jnp.sum(popcount32(x).astype(jnp.int32), axis=-1)
+
+
+def bitplane_hamming_ref(planes_r: jnp.ndarray, planes_s: jnp.ndarray,
+                         pc_r: jnp.ndarray, pc_s: jnp.ndarray) -> jnp.ndarray:
+    dot = jnp.einsum("ib,jb->ij", planes_r.astype(jnp.int32), planes_s.astype(jnp.int32))
+    return pc_r[:, None] + pc_s[None, :] - 2 * dot
+
+
+def required_overlap_ref(sim: str, tau: float, lr: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
+    lr = lr.astype(jnp.float32)
+    ls = ls.astype(jnp.float32)
+    if sim == OVERLAP:
+        return jnp.full(jnp.broadcast_shapes(lr.shape, ls.shape), float(tau), jnp.float32)
+    if sim == JACCARD:
+        return (tau / (1.0 + tau)) * (lr + ls)
+    if sim == COSINE:
+        return tau * jnp.sqrt(lr * ls)
+    if sim == DICE:
+        return (tau / 2.0) * (lr + ls)
+    raise ValueError(sim)
+
+
+def candidate_matrix_ref(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    *,
+    sim: str,
+    tau: float,
+    self_join: bool,
+    cutoff: int = 1 << 30,
+) -> jnp.ndarray:
+    ham = hamming_matrix_ref(words_r, words_s)
+    lr = len_r.astype(jnp.int32)[:, None]
+    ls = len_s.astype(jnp.int32)[None, :]
+    ub = (lr + ls - ham) // 2
+    ub = jnp.minimum(ub, jnp.minimum(lr, ls))
+    need = required_overlap_ref(sim, tau, lr, ls)
+    passed = ub.astype(jnp.float32) >= need
+    over_cut = (lr > cutoff) | (ls > cutoff)
+    cand = passed | over_cut
+    cand &= (lr > 0) & (ls > 0)
+    if self_join:
+        nr = words_r.shape[0]
+        ns = words_s.shape[0]
+        gi = jnp.arange(nr)[:, None]
+        gj = jnp.arange(ns)[None, :]
+        cand &= gi < gj
+    return cand

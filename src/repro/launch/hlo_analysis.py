@@ -1,0 +1,312 @@
+"""Post-SPMD HLO analysis: loop-aware FLOPs, HBM traffic and collective bytes.
+
+``compiled.cost_analysis()`` counts each ``while`` body exactly once, which
+under-reports scan-over-layers models by ~num_layers x.  This module parses
+``compiled.as_text()`` instead and:
+
+* builds the computation call graph (while bodies via
+  ``backend_config={"known_trip_count":...}``, ``call``/fusion edges),
+* accumulates a trip-count **multiplier** per computation,
+* counts per-computation
+  - dot/convolution FLOPs (2 x result x contracted dims — the MXU term),
+  - HBM traffic at fusion granularity (operand reads + result writes),
+  - collective traffic per op with replica-group sizes, using per-device ring
+    formulas: all-gather (g-1)/g x result, all-reduce 2(g-1)/g x result,
+    reduce-scatter (g-1) x result, all-to-all (g-1)/g x result,
+    collective-permute 1 x result.
+
+Everything is per-device (the module is the partitioned program).  Validated
+against ``cost_analysis`` on loop-free programs in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_shape: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    shapes: Dict[str, str]  # op name -> result shape (params included)
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{")
+_SHAPE_TOK = r"(?:\w+\[[\d,]*\](?:\{[^}]*\})?)"
+_SHAPE_FULL = rf"(?:{_SHAPE_TOK}|\((?:[^()]|\([^()]*\))*\))"
+_OP_LINE = re.compile(
+    rf"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*({_SHAPE_FULL})\s+([\w\-]+)\(")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_CALLEE = re.compile(r"(?:body|to_apply|calls)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            # parameter declarations: "%p = f32[..] parameter(0)" match too;
+            # anything else (attributes continuation) is skipped.
+            continue
+        name, shape, opcode = m.group(1), m.group(2).strip(), m.group(3)
+        paren = line[m.end():]
+        operands = _OPERAND.findall(paren.split("),")[0] if ")," in paren else paren)
+        op = Op(name=name, opcode=opcode, result_shape=shape, operands=operands, line=line)
+        cur.ops.append(op)
+        cur.shapes[name] = shape
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Trip-count multiplier per computation via call-graph walk from ENTRY."""
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+    if entry is None:  # fall back: the last computation is usually the entry
+        entry = list(comps)[-1]
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # Repeated relaxation (call graph is a DAG of modest depth).
+    for _ in range(16):
+        changed = False
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for op in comp.ops:
+                if op.opcode == "while":
+                    trips = 1
+                    tm = _TRIP.search(op.line)
+                    if tm:
+                        trips = int(tm.group(1))
+                    body = _CALLEE.search(op.line)
+                    cond = _COND.search(op.line)
+                    for target, k in ((body, trips), (cond, trips + 1)):
+                        if target and mult.get(target.group(1), 0.0) < m * k:
+                            mult[target.group(1)] = m * k
+                            changed = True
+                elif op.opcode in ("call", "fusion", "custom-call", "reduce",
+                                   "conditional", "map", "sort", "scatter",
+                                   "select-and-scatter", "reduce-window"):
+                    cm = _CALLEE.search(op.line)
+                    if cm and mult.get(cm.group(1), 0.0) < m:
+                        mult[cm.group(1)] = m
+                        changed = True
+        if not changed:
+            break
+    return dict(mult)
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    """2 x prod(result dims) x prod(lhs contracted dims)."""
+    out_elems = _shape_elems(op.result_shape)
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    if not mc or not op.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_shape = shapes.get(op.operands[0], "")
+    sm = _SHAPE_RE.search(lhs_shape)
+    if not sm:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    contracted = 1
+    for idx in mc.group(1).split(","):
+        if idx != "" and int(idx) < len(dims):
+            contracted *= dims[int(idx)]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems = _shape_elems(op.result_shape)
+    if len(op.operands) < 2:
+        return 2.0 * out_elems
+    kshape = shapes.get(op.operands[1], "")
+    kelems = _shape_elems(kshape)
+    # rough: 2 * out * (kernel elems / out-channels)
+    return 2.0 * out_elems * max(kelems, 1) ** 0.5
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional",
+}
+
+
+@dataclasses.dataclass
+class CollectiveInfo:
+    opcode: str
+    group_size: int
+    result_bytes: int
+    traffic_bytes: float   # per device, ring model
+    count: float           # including loop multipliers
+    example: str = ""
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float                       # per device, loop-aware
+    hbm_bytes: float                   # per device, fusion-granularity R+W
+    collective_traffic: float          # per device bytes on the wire
+    collectives: List[CollectiveInfo]
+    per_opcode_flops: Dict[str, float]
+
+
+def _collective_traffic(opcode: str, g: int, result_bytes: int) -> float:
+    if g <= 1:
+        return 0.0
+    if opcode.startswith("all-gather"):
+        return (g - 1) / g * result_bytes
+    if opcode.startswith("all-reduce"):
+        return 2.0 * (g - 1) / g * result_bytes
+    if opcode.startswith("reduce-scatter"):
+        return (g - 1) * result_bytes
+    if opcode.startswith("all-to-all"):
+        return (g - 1) / g * result_bytes
+    if opcode.startswith("collective-permute"):
+        return float(result_bytes)
+    return 0.0
+
+
+def _fusion_computations(comps: Dict[str, Computation]) -> set:
+    """Computations called by fusion ops — their buffers are fused away."""
+    out = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                cm = _CALLEE.search(op.line)
+                if cm:
+                    out.add(cm.group(1))
+    return out
+
+
+def analyze(text: str, default_group: int = 1) -> HloCosts:
+    comps = parse_module(text)
+    mult = _multipliers(comps)
+    fusion_comps = _fusion_computations(comps)
+    flops = 0.0
+    hbm = 0.0
+    per_opcode: Dict[str, float] = defaultdict(float)
+    coll: Dict[Tuple[str, int, int], CollectiveInfo] = {}
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        fusion_comp = cname in fusion_comps
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                f = _dot_flops(op, comp.shapes) * m
+                flops += f
+                per_opcode["dot"] += f
+            elif oc == "convolution":
+                f = _conv_flops(op, comp.shapes) * m
+                flops += f
+                per_opcode["convolution"] += f
+            base = oc.replace("-start", "")
+            if base in _COLLECTIVES and not oc.endswith("-done"):
+                rb = _shape_bytes(op.result_shape)
+                g = default_group
+                gm = _GROUPS_IOTA.search(op.line)
+                if gm:
+                    g = int(gm.group(2))
+                else:
+                    gl = _GROUPS_LIST.search(op.line)
+                    if gl:
+                        g = len(gl.group(1).split(","))
+                key = (base, g, rb)
+                if key not in coll:
+                    coll[key] = CollectiveInfo(
+                        opcode=base, group_size=g, result_bytes=rb,
+                        traffic_bytes=0.0, count=0.0, example=op.line.strip()[:160])
+                coll[key].count += m
+                coll[key].traffic_bytes += _collective_traffic(base, g, rb) * m
+            # HBM traffic: fusion-granularity writes + reads.  Skip ops inside
+            # fusion computations (their buffers are fused away).
+            if not fusion_comp and oc not in _SKIP_BYTES_OPS:
+                if oc == "dynamic-update-slice":
+                    # In-place aliasing: traffic = the updated slice (r+w),
+                    # not the full buffer.
+                    upd_bytes = _shape_bytes(comp.shapes.get(op.operands[1], ""))                         if len(op.operands) > 1 else 0
+                    hbm += 2 * upd_bytes * m
+                else:
+                    w = _shape_bytes(op.result_shape)
+                    r = sum(_shape_bytes(comp.shapes.get(o, "")) for o in op.operands)
+                    hbm += (w + r) * m
+
+    total_coll = sum(c.traffic_bytes for c in coll.values())
+    return HloCosts(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_traffic=total_coll,
+        collectives=sorted(coll.values(), key=lambda c: -c.traffic_bytes),
+        per_opcode_flops=dict(per_opcode),
+    )

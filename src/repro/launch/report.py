@@ -1,0 +1,102 @@
+"""Aggregate dry-run JSON cells into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load(out_dir: str) -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}GiB"
+
+
+def roofline_table(recs: List[dict], mesh: str, tag: str = "") -> str:
+    rows = []
+    head = ("| arch | shape | per-dev FLOPs | per-dev HBM B | coll B | "
+            "t_comp | t_mem | t_coll | bound | bottleneck | 6ND/HLO | frac |")
+    sep = "|" + "---|" * 12
+    for r in recs:
+        if r.get("mesh") != mesh or not r.get("ok") or "roofline" not in r:
+            continue
+        if bool(tag) != ("tag" in r.get("_tag", "")):
+            pass
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rl['flops_per_device']:.2e} | "
+            f"{rl['hbm_bytes_per_device']:.2e} | {rl['collective_bytes_per_device']:.2e} | "
+            f"{rl['t_compute']*1e3:.1f}ms | {rl['t_memory']*1e3:.1f}ms | "
+            f"{rl['t_collective']*1e3:.1f}ms | {rl['step_time_bound']*1e3:.1f}ms | "
+            f"{rl['bottleneck']} | {rl['useful_ratio']:.3f} | "
+            f"{rl['roofline_fraction']:.3f} |")
+    skips = [r for r in recs if r.get("mesh") == mesh and "skipped" in r]
+    out = [head, sep] + rows
+    if skips:
+        out.append("")
+        for r in skips:
+            out.append(f"- SKIP {r['arch']} x {r['shape']}: {r['skipped']}")
+    return "\n".join(out)
+
+
+def memory_table(recs: List[dict], mesh: str) -> str:
+    head = "| arch | shape | args/dev | temp/dev | fits 16GiB HBM? | compile_s |"
+    sep = "|" + "---|" * 6
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh or not r.get("ok") or "memory" not in r:
+            continue
+        m = r["memory"]
+        args = m.get("argument_size_in_bytes") or 0
+        temp = m.get("temp_size_in_bytes") or 0
+        alias = m.get("alias_size_in_bytes") or 0
+        tot = args + temp - 0  # aliased outputs reuse argument space
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_bytes(args)} | {fmt_bytes(temp)} | "
+            f"{'yes' if tot < 16*2**30 else 'NO'} | {r.get('compile_seconds', 0):.0f} |")
+    return "\n".join([head, sep] + rows)
+
+
+def pick_hillclimb(recs: List[dict]) -> List[str]:
+    singles = [r for r in recs if r.get("mesh") == "single" and r.get("ok")
+               and "roofline" in r]
+    worst_frac = min(singles, key=lambda r: r["roofline"]["roofline_fraction"])
+    most_coll = max(singles, key=lambda r: r["roofline"]["t_collective"] /
+                    max(r["roofline"]["step_time_bound"], 1e-12))
+    lines = [
+        f"worst roofline fraction: {worst_frac['arch']} x {worst_frac['shape']} "
+        f"(frac={worst_frac['roofline']['roofline_fraction']:.4f})",
+        f"most collective-bound: {most_coll['arch']} x {most_coll['shape']} "
+        f"(t_coll share={most_coll['roofline']['t_collective']/max(most_coll['roofline']['step_time_bound'],1e-12):.2f})",
+        "paper-representative: bitmap-join x join_1m (the paper's own workload)",
+    ]
+    return lines
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(out_dir)
+    for mesh in ("single", "multi"):
+        n_ok = sum(1 for r in recs if r.get("mesh") == mesh and r.get("ok"))
+        print(f"\n### Roofline — {mesh} mesh ({n_ok} cells)\n")
+        print(roofline_table(recs, mesh))
+        print(f"\n### Memory — {mesh} mesh\n")
+        print(memory_table(recs, mesh))
+    print("\n### Hillclimb candidates\n")
+    for l in pick_hillclimb(recs):
+        print("-", l)
+
+
+if __name__ == "__main__":
+    main()

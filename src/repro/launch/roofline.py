@@ -1,0 +1,96 @@
+"""Three-term roofline model from compiled dry-run artifacts.
+
+Hardware constants (assignment: TPU v5e-class):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: ~50 GB/s per link; an axis-collective uses the
+                      bidirectional ring (2 links) of that torus axis.
+
+Terms (seconds per step, per device):
+  t_compute    = HLO_FLOPs / 197e12
+  t_memory     = HLO_bytes / 819e9
+  t_collective = collective_traffic / (2 * 50e9)
+
+with HLO_FLOPs / HLO_bytes / collective traffic computed *loop-aware* by
+``hlo_analysis`` (XLA's ``cost_analysis`` counts while bodies once; we
+multiply by known trip counts).  The dominant term is the bottleneck; the
+roofline fraction reported in EXPERIMENTS.md is
+``t_compute / max(t_compute, t_memory, t_collective)`` (how close the step is
+to being compute-bound at peak).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.launch.hlo_analysis import HloCosts
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+LINKS_PER_COLLECTIVE = 2   # bidirectional ring on one torus axis
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float                  # 6·N_active·D (train) etc., global
+    useful_ratio: float                 # model_flops / (flops_per_device * n)
+    roofline_fraction: float            # t_compute / max(terms)
+    step_time_bound: float              # max of terms (no-overlap bound)
+    notes: str = ""
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def compute_roofline(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    costs: HloCosts,
+    model_flops: float,
+    notes: str = "",
+) -> Roofline:
+    t_c = costs.flops / PEAK_FLOPS
+    t_m = costs.hbm_bytes / HBM_BW
+    t_x = costs.collective_traffic / (LINKS_PER_COLLECTIVE * LINK_BW)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    hlo_global = costs.flops * n_devices
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=costs.flops,
+        hbm_bytes_per_device=costs.hbm_bytes,
+        collective_bytes_per_device=costs.collective_traffic,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / hlo_global) if hlo_global else 0.0,
+        roofline_fraction=(t_c / max(max(terms.values()), 1e-30)),
+        step_time_bound=max(terms.values()),
+        notes=notes,
+    )
+
+
+def model_flops_for(cfg, shape_spec, active_params: int) -> float:
+    """MODEL_FLOPS per step (global): 6·N·D train, 2·N·D prefill, 2·N·B decode."""
+    b, s = shape_spec.global_batch, shape_spec.seq_len
+    if shape_spec.kind == "train":
+        return 6.0 * active_params * b * s
+    if shape_spec.kind == "prefill":
+        return 2.0 * active_params * b * s
+    return 2.0 * active_params * b  # decode: one token per sequence

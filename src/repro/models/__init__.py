@@ -1,0 +1,5 @@
+"""LM model zoo: composable decoder architectures for all 10 assigned configs."""
+
+from repro.models.config import ModelConfig, reduced
+from repro.models.model import Model
+from repro.models.decode import DecodeEngine

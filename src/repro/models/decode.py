@@ -1,0 +1,505 @@
+"""Serving path: KV / SSM-state caches, prefill and one-token decode.
+
+``serve_step`` semantics per the assignment: decode shapes lower a single
+new-token step against a cache of ``seq_len`` (``decode_32k``: B=128 cache
+32k; ``long_500k``: B=1 cache 524k, SSM/hybrid only).
+
+Cache sharding (see ``cache_specs``):
+* KV caches shard KV-heads over ``model`` when divisible (else replicate) and
+  batch over the batch axes;
+* when the batch is too small to fill the batch axes (long_500k, B=1) the
+  cache *sequence* dim shards over ``data`` instead — decode attention's
+  softmax reductions then lower to the flash-style all-reduce pair
+  (sequence-parallel decode).
+* SSM states shard heads over ``model``; they are O(1) in sequence length,
+  which is the whole point of running long_500k on the SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.distributed.sharding import attn_partition, constrain
+from repro.models.config import ModelConfig
+from repro.models.model import Model, _dtype
+
+Cache = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeEngine:
+    model: Model
+
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.model.cfg
+
+    # ------------------------------------------------------------------
+    # Cache construction
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Cache:
+        cfg = self.cfg
+        cdt = _dtype(cfg.dtype)
+        fam = cfg.family
+        nl = cfg.num_layers
+
+        def kv(n_layers):
+            return {
+                "k": jnp.zeros((n_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), cdt),
+                "v": jnp.zeros((n_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), cdt),
+            }
+
+        def ssm_states(n_layers):
+            din, ns, h, p = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+            k = cfg.ssm_conv
+            return {
+                "conv_x": jnp.zeros((n_layers, batch, k - 1, din), cdt),
+                "conv_b": jnp.zeros((n_layers, batch, k - 1, ns), cdt),
+                "conv_c": jnp.zeros((n_layers, batch, k - 1, ns), cdt),
+                "ssm": jnp.zeros((n_layers, batch, h, p, ns), cdt),
+            }
+
+        cache: Cache = {"cur": jnp.zeros((batch,), jnp.int32)}
+        if fam in ("dense", "audio", "moe"):
+            cache.update(kv(nl))
+        elif fam == "ssm":
+            cache.update(ssm_states(nl))
+        elif fam == "hybrid":
+            n_groups = nl // cfg.attn_every
+            cache.update(ssm_states(nl))
+            cache["shared"] = kv(n_groups)
+        elif fam == "vlm":
+            n_cross = nl // (cfg.cross_attn_every + 1)
+            n_self = nl - n_cross
+            cache.update(kv(n_self))
+            cache["img_k"] = jnp.zeros(
+                (n_cross, batch, cfg.num_image_tokens, cfg.num_kv_heads, cfg.head_dim), cdt)
+            cache["img_v"] = jnp.zeros_like(cache["img_k"])
+        else:
+            raise ValueError(fam)
+        return cache
+
+    def cache_shapes(self, batch: int, max_len: int) -> Cache:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def cache_specs(self, mesh, batch: int,
+                    fsdp: Tuple[str, ...] = ("pod", "data"),
+                    tp: str = "model") -> Cache:
+        cfg = self.cfg
+        fsdp = tuple(a for a in fsdp if a in mesh.shape)
+        fsdp_size = int(np.prod([mesh.shape[a] for a in fsdp])) if fsdp else 1
+        tp_size = int(mesh.shape[tp]) if tp in mesh.shape else 1
+        batch_ax = fsdp if fsdp and batch % fsdp_size == 0 else None
+        # Sequence-parallel fallback for tiny batches (long_500k).
+        seq_ax = None if batch_ax is not None else tuple(a for a in fsdp if a != "pod") or None
+
+        def ax_t(dim):
+            return tp if tp_size > 1 and dim % tp_size == 0 else None
+
+        def spec_for(name, leaf):
+            shape = leaf.shape
+            if name == "cur":
+                return P(None)
+            if name in ("k", "v"):  # (L, B, S, KV, hd)
+                sax = seq_ax if seq_ax and shape[2] % fsdp_size == 0 else None
+                kv_ax = ax_t(shape[3])
+                # MHA fallback (e.g. 24 KV heads on a 16-way model axis):
+                # shard head_dim instead — decode attention contracts it and
+                # psums small score tensors, keeping the cache 16x smaller.
+                hd_ax = ax_t(shape[4]) if kv_ax is None else None
+                return P(None, batch_ax, sax, kv_ax, hd_ax)
+            if name in ("img_k", "img_v"):
+                kv_ax = ax_t(shape[3])
+                hd_ax = ax_t(shape[4]) if kv_ax is None else None
+                return P(None, batch_ax, None, kv_ax, hd_ax)
+            if name in ("conv_x", "conv_b", "conv_c"):
+                return P(None, batch_ax, None, ax_t(shape[3]))
+            if name == "ssm":  # (L, B, H, P, N)
+                return P(None, batch_ax, ax_t(shape[2]), None, None)
+            raise ValueError(name)
+
+        shapes = self.cache_shapes(batch, 8)  # max_len placeholder; only dims matter
+
+        def walk(tree, out):
+            for k, vv in tree.items():
+                if isinstance(vv, dict):
+                    out[k] = walk(vv, {})
+                else:
+                    out[k] = spec_for(k, vv)
+            return out
+
+        # seq dim divisibility must use the real max_len
+        shapes = self.cache_shapes(batch, max(fsdp_size, 8) * 64)
+        return walk(shapes, {})
+
+    # ------------------------------------------------------------------
+    # Decode bodies
+    # ------------------------------------------------------------------
+    def _attn_decode(self, x, blk, kc, vc, cur):
+        """x: (B, 1, D). kc/vc: (B, S, KV, hd). Returns (out, kc, vc)."""
+        cfg = self.cfg
+        b = x.shape[0]
+        h = L.rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dq->bsq", h, blk["attn"]["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dq->bsq", h, blk["attn"]["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dq->bsq", h, blk["attn"]["wv"].astype(x.dtype))
+        q = q.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+        k = k.reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+        v = v.reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, blk["attn"]["q_norm"], cfg.norm_eps)
+            k = L.rms_norm(k, blk["attn"]["k_norm"], cfg.norm_eps)
+        pos = cur[:, None]
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+        kc = kc.at[jnp.arange(b), cur].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[jnp.arange(b), cur].set(v[:, 0].astype(vc.dtype))
+        out = L.decode_attention(q, kc, vc, cur + 1)
+        out = out.reshape(b, 1, cfg.attn_dim)
+        out = jnp.einsum("bsq,qd->bsd", out, blk["attn"]["wo"].astype(x.dtype))
+        return x + out, kc, vc
+
+    def _mlp_or_moe(self, x, blk):
+        cfg = self.cfg
+        h = L.rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
+        if "moe" in blk:
+            mo, _ = moe_lib.moe_block(
+                h, blk["moe"], num_experts=cfg.num_experts,
+                k=cfg.experts_per_token, capacity_factor=cfg.capacity_factor)
+            if cfg.dense_residual:
+                mo = mo + L.swiglu(h, blk["dense_mlp"]["w_gate"],
+                                   blk["dense_mlp"]["w_up"], blk["dense_mlp"]["w_down"])
+            return x + mo
+        return x + L.swiglu(h, blk["mlp"]["w_gate"], blk["mlp"]["w_up"],
+                            blk["mlp"]["w_down"])
+
+    def _mamba_decode(self, x, blk, lcache):
+        cfg = self.cfg
+        h, new_cache = ssm_lib.mamba2_block(
+            L.rms_norm(x, blk["norm"], cfg.norm_eps), blk["mamba"],
+            d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+            chunk=cfg.ssm_chunk, norm_eps=cfg.norm_eps, cache=lcache)
+        return x + h, new_cache
+
+    # ------------------------------------------------------------------
+    # One-token decode step
+    # ------------------------------------------------------------------
+    def decode_step(self, params, cache: Cache,
+                    batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Cache]:
+        """batch: tokens (B, 1) (or frame_embeds (B, 1, D)). Returns
+        (logits (B, 1, V), new cache)."""
+        cfg = self.cfg
+        cdt = _dtype(cfg.dtype)
+        cur = cache["cur"]
+        if cfg.frame_inputs:
+            x = batch["frame_embeds"].astype(cdt)
+        else:
+            x = params["embed"].astype(cdt)[batch["tokens"]]
+        fam = cfg.family
+        new_cache = dict(cache)
+
+        if fam in ("dense", "audio", "moe"):
+            def body(x, scanned):
+                blk, kc, vc = scanned
+                x, kc, vc = self._attn_decode(x, blk, kc, vc, cur)
+                x = self._mlp_or_moe(x, blk)
+                return x, (kc, vc)
+
+            x, (k_new, v_new) = jax.lax.scan(
+                body, x, (params["blocks"], cache["k"], cache["v"]))
+            new_cache["k"], new_cache["v"] = k_new, v_new
+
+        elif fam == "ssm":
+            def body(x, scanned):
+                blk, lc = scanned
+                x, nc = self._mamba_decode(x, blk, lc)
+                return x, nc
+
+            lcaches = {k: cache[k] for k in ("conv_x", "conv_b", "conv_c", "ssm")}
+            x, ncs = jax.lax.scan(body, x, (params["blocks"], lcaches))
+            new_cache.update(ncs)
+
+        elif fam == "hybrid":
+            nl, period = cfg.num_layers, cfg.attn_every
+            n_groups, tail = nl // period, nl % period
+            blocks = params["blocks"]
+            lcaches = {k: cache[k] for k in ("conv_x", "conv_b", "conv_c", "ssm")}
+            main_blk = jax.tree.map(
+                lambda a: a[: n_groups * period].reshape((n_groups, period) + a.shape[1:]),
+                blocks)
+            main_cache = jax.tree.map(
+                lambda a: a[: n_groups * period].reshape((n_groups, period) + a.shape[1:]),
+                lcaches)
+            tail_blk = jax.tree.map(lambda a: a[n_groups * period:], blocks)
+            tail_cache = jax.tree.map(lambda a: a[n_groups * period:], lcaches)
+            shared = jax.tree.map(lambda a: a[0], params["shared_attn"])
+
+            def group_body(x, scanned):
+                grp, grp_cache, kc, vc = scanned
+                x, kc, vc = self._attn_decode(x, shared, kc, vc, cur)
+                x = self._mlp(x, shared)
+
+                def layer_body(x, sc):
+                    blk, lc = sc
+                    x, nc = self._mamba_decode(x, blk, lc)
+                    return x, nc
+
+                x, ncs = jax.lax.scan(layer_body, x, (grp, grp_cache))
+                return x, (ncs, kc, vc)
+
+            x, (main_ncs, k_new, v_new) = jax.lax.scan(
+                group_body, x, (main_blk, main_cache,
+                                cache["shared"]["k"], cache["shared"]["v"]))
+            new_main = jax.tree.map(
+                lambda a: a.reshape((n_groups * period,) + a.shape[2:]), main_ncs)
+            if tail:
+                def layer_body(x, sc):
+                    blk, lc = sc
+                    x, nc = self._mamba_decode(x, blk, lc)
+                    return x, nc
+
+                x, tail_ncs = jax.lax.scan(layer_body, x, (tail_blk, tail_cache))
+                merged = jax.tree.map(
+                    lambda m, t: jnp.concatenate([m, t], axis=0), new_main, tail_ncs)
+            else:
+                merged = new_main
+            new_cache.update(merged)
+            new_cache["shared"] = {"k": k_new, "v": v_new}
+
+        elif fam == "vlm":
+            n_cross = cfg.num_layers // (cfg.cross_attn_every + 1)
+            per = cfg.cross_attn_every
+            blocks = params["blocks"]
+            grouped = jax.tree.map(
+                lambda a: a.reshape((n_cross, per) + a.shape[1:]), blocks)
+            kc_g = cache["k"].reshape((n_cross, per) + cache["k"].shape[1:])
+            vc_g = cache["v"].reshape((n_cross, per) + cache["v"].shape[1:])
+
+            def group_body(x, scanned):
+                grp, cblk, kcs, vcs, ik, iv = scanned
+
+                def layer_body(x, sc):
+                    blk, kc, vc = sc
+                    x, kc, vc = self._attn_decode(x, blk, kc, vc, cur)
+                    x = self._mlp(x, blk)
+                    return x, (kc, vc)
+
+                x, (kcs, vcs) = jax.lax.scan(layer_body, x, (grp, kcs, vcs))
+                # Cross-attention against cached image k/v.
+                h = L.rms_norm(x, cblk["attn_norm"], cfg.norm_eps)
+                b = x.shape[0]
+                q = jnp.einsum("bsd,dq->bsq", h, cblk["attn"]["wq"].astype(x.dtype))
+                q = q.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+                if cfg.qk_norm:
+                    q = L.rms_norm(q, cblk["attn"]["q_norm"], cfg.norm_eps)
+                n_img = ik.shape[1]
+                out = L.decode_attention(
+                    q, ik, iv, jnp.full((b,), n_img, jnp.int32))
+                out = out.reshape(b, 1, cfg.attn_dim)
+                out = jnp.einsum("bsq,qd->bsd", out, cblk["attn"]["wo"].astype(x.dtype))
+                x = x + jnp.tanh(cblk["gate"]).astype(x.dtype) * out
+                h2 = L.swiglu(L.rms_norm(x, cblk["mlp_norm"], cfg.norm_eps),
+                              cblk["mlp"]["w_gate"], cblk["mlp"]["w_up"],
+                              cblk["mlp"]["w_down"])
+                x = x + jnp.tanh(cblk["gate"]).astype(x.dtype) * h2
+                return x, (kcs, vcs)
+
+            x, (k_new, v_new) = jax.lax.scan(
+                group_body, x,
+                (grouped, params["cross_blocks"], kc_g, vc_g,
+                 cache["img_k"], cache["img_v"]))
+            new_cache["k"] = k_new.reshape(cache["k"].shape)
+            new_cache["v"] = v_new.reshape(cache["v"].shape)
+        else:
+            raise ValueError(fam)
+
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt))
+        logits = constrain(logits, ("batch", None, "tp"))
+        new_cache["cur"] = cur + 1
+        return logits, new_cache
+
+    def _mlp(self, x, blk):
+        cfg = self.cfg
+        return x + L.swiglu(L.rms_norm(x, blk["mlp_norm"], cfg.norm_eps),
+                            blk["mlp"]["w_gate"], blk["mlp"]["w_up"],
+                            blk["mlp"]["w_down"])
+
+    # ------------------------------------------------------------------
+    # Prefill: forward pass that also fills the cache
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jnp.ndarray],
+                max_len: Optional[int] = None,
+                last_only: bool = False) -> Tuple[jnp.ndarray, Cache]:
+        """Runs the full-sequence forward and returns (logits, filled cache).
+
+        The cache is allocated at ``max_len`` (>= S) and filled for the first
+        S positions. Prefill reuses the flash attention kernel schedule and
+        additionally emits per-layer K/V as scan outputs.  ``last_only``
+        returns logits for the final position only (B, 1, V) — what serving
+        actually needs; avoids materialising the (B, S, V) tensor.
+        """
+        cfg = self.cfg
+        cdt = _dtype(cfg.dtype)
+        if cfg.frame_inputs:
+            x = batch["frame_embeds"].astype(cdt)
+        else:
+            x = params["embed"].astype(cdt)[batch["tokens"]]
+        b, s = x.shape[0], x.shape[1]
+        max_len = max_len or s
+        pad = max_len - s
+        fam = cfg.family
+        cache = self.init_cache(b, max_len)
+        cache["cur"] = jnp.full((b,), s, jnp.int32)
+
+        def kv_of(h, blk):
+            k = jnp.einsum("bsd,dq->bsq", h, blk["attn"]["wk"].astype(h.dtype))
+            v = jnp.einsum("bsd,dq->bsq", h, blk["attn"]["wv"].astype(h.dtype))
+            k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+            v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+            return k, v
+
+        def attn_with_cache(x, blk):
+            h = L.rms_norm(x, blk["attn_norm"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dq->bsq", h, blk["attn"]["wq"].astype(x.dtype))
+            q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+            k, v = kv_of(h, blk)
+            if cfg.qk_norm:
+                q = L.rms_norm(q, blk["attn"]["q_norm"], cfg.norm_eps)
+                k = L.rms_norm(k, blk["attn"]["k_norm"], cfg.norm_eps)
+            pos = jnp.arange(s)[None, :]
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+            q, k, v = attn_partition(q, k, v, cfg.num_heads, cfg.num_kv_heads)
+            out = L.flash_attention(q, k, v, causal=True)
+            out = out.reshape(b, s, cfg.attn_dim)
+            x = x + jnp.einsum("bsq,qd->bsd", out, blk["attn"]["wo"].astype(x.dtype))
+            kp = jnp.pad(k.astype(cdt), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vp = jnp.pad(v.astype(cdt), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return x, kp, vp
+
+        if fam in ("dense", "audio", "moe"):
+            def body(x, blk):
+                x, kp, vp = attn_with_cache(x, blk)
+                x = self._mlp_or_moe(x, blk)
+                return x, (kp, vp)
+
+            x, (kc, vc) = jax.lax.scan(body, x, params["blocks"])
+            cache["k"], cache["v"] = kc, vc
+
+        elif fam == "ssm":
+            def body(x, blk):
+                h = L.rms_norm(x, blk["norm"], cfg.norm_eps)
+                out, st = self._mamba_prefill(h, blk)
+                return x + out, st
+
+            x, states = jax.lax.scan(body, x, params["blocks"])
+            cache.update(states)
+
+        elif fam == "hybrid":
+            nl, period = cfg.num_layers, cfg.attn_every
+            n_groups, tail = nl // period, nl % period
+            blocks = params["blocks"]
+            main = jax.tree.map(lambda a: a[: n_groups * period].reshape(
+                (n_groups, period) + a.shape[1:]), blocks)
+            rest = jax.tree.map(lambda a: a[n_groups * period:], blocks)
+            shared = jax.tree.map(lambda a: a[0], params["shared_attn"])
+
+            def group_body(x, grp):
+                x, kp, vp = attn_with_cache(x, shared)
+                x = self._mlp(x, shared)
+
+                def layer_body(x, blk):
+                    h = L.rms_norm(x, blk["norm"], cfg.norm_eps)
+                    out, st = self._mamba_prefill(h, blk)
+                    return x + out, st
+
+                x, states = jax.lax.scan(layer_body, x, grp)
+                return x, (states, kp, vp)
+
+            x, (main_states, kc, vc) = jax.lax.scan(group_body, x, main)
+            main_states = jax.tree.map(
+                lambda a: a.reshape((n_groups * period,) + a.shape[2:]), main_states)
+            if tail:
+                def layer_body(x, blk):
+                    h = L.rms_norm(x, blk["norm"], cfg.norm_eps)
+                    out, st = self._mamba_prefill(h, blk)
+                    return x + out, st
+
+                x, tail_states = jax.lax.scan(layer_body, x, rest)
+                main_states = jax.tree.map(
+                    lambda m, t: jnp.concatenate([m, t], 0), main_states, tail_states)
+            cache.update(main_states)
+            cache["shared"] = {"k": kc, "v": vc}
+
+        elif fam == "vlm":
+            img = batch["image_embeds"].astype(cdt)
+            n_cross = cfg.num_layers // (cfg.cross_attn_every + 1)
+            per = cfg.cross_attn_every
+            grouped = jax.tree.map(
+                lambda a: a.reshape((n_cross, per) + a.shape[1:]), params["blocks"])
+
+            def group_body(x, scanned):
+                grp, cblk = scanned
+
+                def layer_body(x, blk):
+                    x, kp, vp = attn_with_cache(x, blk)
+                    x = self._mlp(x, blk)
+                    return x, (kp, vp)
+
+                x, (kcs, vcs) = jax.lax.scan(layer_body, x, grp)
+                ni = img.shape[1]
+                ik = jnp.einsum("bnd,dq->bnq", img, cblk["attn"]["wk"].astype(x.dtype))
+                iv = jnp.einsum("bnd,dq->bnq", img, cblk["attn"]["wv"].astype(x.dtype))
+                ik = ik.reshape(b, ni, cfg.num_kv_heads, cfg.head_dim).astype(cdt)
+                iv = iv.reshape(b, ni, cfg.num_kv_heads, cfg.head_dim).astype(cdt)
+                h = L.rms_norm(x, cblk["attn_norm"], cfg.norm_eps)
+                hq = jnp.einsum("bsd,dq->bsq", h, cblk["attn"]["wq"].astype(x.dtype))
+                hq = hq.reshape(b, s, cfg.num_heads, cfg.head_dim)
+                if cfg.qk_norm:
+                    hq = L.rms_norm(hq, cblk["attn"]["q_norm"], cfg.norm_eps)
+                out = L.flash_attention(hq, ik, iv, causal=False)
+                out = out.reshape(b, s, cfg.attn_dim)
+                out = jnp.einsum("bsq,qd->bsd", out, cblk["attn"]["wo"].astype(x.dtype))
+                x = x + jnp.tanh(cblk["gate"]).astype(x.dtype) * out
+                h2 = L.swiglu(L.rms_norm(x, cblk["mlp_norm"], cfg.norm_eps),
+                              cblk["mlp"]["w_gate"], cblk["mlp"]["w_up"],
+                              cblk["mlp"]["w_down"])
+                x = x + jnp.tanh(cblk["gate"]).astype(x.dtype) * h2
+                return x, (kcs, vcs, ik, iv)
+
+            x, (kc, vc, ik, iv) = jax.lax.scan(
+                group_body, x, (grouped, params["cross_blocks"]))
+            cache["k"] = kc.reshape(cache["k"].shape)
+            cache["v"] = vc.reshape(cache["v"].shape)
+            cache["img_k"], cache["img_v"] = ik, iv
+        else:
+            raise ValueError(fam)
+
+        if last_only:
+            x = x[:, -1:, :]
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt))
+        logits = constrain(logits, ("batch", None, "tp"))
+        return logits, cache
+
+    def _mamba_prefill(self, h, blk):
+        """Mamba block over the full sequence, returning the decode cache."""
+        cfg = self.cfg
+        cdt = _dtype(cfg.dtype)
+        out, st = ssm_lib.mamba2_block(
+            h, blk["mamba"], d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+            chunk=cfg.ssm_chunk, norm_eps=cfg.norm_eps)
+        st = jax.tree.map(lambda a: a.astype(cdt), st)
+        return out, st

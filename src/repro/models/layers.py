@@ -1,0 +1,318 @@
+"""Shared neural layers: RMSNorm, RoPE, GQA attention (train + decode paths),
+SwiGLU MLP.
+
+Attention has two lowering modes:
+
+* :func:`flash_attention` — blockwise online-softmax (FlashAttention-style
+  recomputation structure expressed in pure JAX ``lax.scan``), used for
+  training and prefill.  Memory per step is O(q_chunk x kv_chunk); the
+  full (S, S) score matrix is never materialised, which is what makes the
+  32k-prefill shapes lowerable.  The baseline schedule computes the full
+  rectangle with causal masking; ``triangle_schedule=True`` switches to a
+  lower-triangle-only block schedule (a §Perf hillclimb lever that halves
+  attention FLOPs at long S).
+* :func:`decode_attention` — one-token attention against a (possibly
+  sequence-sharded) KV cache.  With the cache's sequence dim sharded over the
+  ``data`` mesh axis, XLA turns the softmax reductions into the flash-style
+  two-pass all-reduce — this is what makes batch=1 x 524k decode shardable.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import attn_partition, constrain
+
+
+# ---------------------------------------------------------------------------
+# Norms / embeddings / MLP
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) causal attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _blk_scores(q_blk, k_blk, scale, causal, qi, kj, q_chunk, kv_chunk):
+    """(B, Cq, KV, G, D) x (B, Ck, KV, D) -> f32 (B, KV, G, Cq, Ck) scores."""
+    s = jnp.einsum("bqkgd,bckd->bkgqc", q_blk, k_blk).astype(jnp.float32) * scale
+    if causal:
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+        k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+    return s
+
+
+def _flash_fwd(q, k, v, causal, q_chunk, kv_chunk, triangle):
+    """Returns (out (B,Sq,H,D), lse (B,KV,G,Sq))."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = d ** -0.5
+    qc = q.reshape(b, nq, q_chunk, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nk, kv_chunk, kv, d)
+    vc = v.reshape(b, nk, kv_chunk, kv, d)
+
+    def q_step(_, q_in):
+        qi, q_blk = q_in
+
+        def kv_step(acc, kj):
+            o, m, l = acc
+            k_blk = jax.lax.dynamic_index_in_dim(kc, kj, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vc, kj, 1, keepdims=False)
+            s = _blk_scores(q_blk, k_blk, scale, causal, qi, kj, q_chunk, kv_chunk)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(v_blk.dtype), v_blk)
+            o_new = o * alpha[..., None] + pv.astype(jnp.float32)
+            new_acc = (o_new, m_new, l_new)
+            if triangle and causal:
+                # Skip strictly-upper blocks (they contribute nothing).
+                take = kj * kv_chunk <= (qi * q_chunk + q_chunk - 1)
+                new_acc = jax.tree.map(
+                    lambda n, o_: jnp.where(take, n, o_), new_acc, acc)
+            return new_acc, None
+
+        o0 = jnp.zeros((b, kv, g, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(kv_step, (o0, m0, l0), jnp.arange(nk))
+        out_blk = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse_blk = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out_blk, lse_blk)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
+    # outs: (nq, B, KV, G, Cq, D) -> (B, Sq, H, D); lse -> (B, KV, G, Sq)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kv, g, sq)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, causal, q_chunk, kv_chunk, triangle):
+    """Blockwise FlashAttention backward (recompute p from lse)."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = d ** -0.5
+    qc = q.reshape(b, nq, q_chunk, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nk, kv_chunk, kv, d)
+    vc = v.reshape(b, nk, kv_chunk, kv, d)
+    doc = do.reshape(b, nq, q_chunk, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    lsec = lse.reshape(b, kv, g, nq, q_chunk).transpose(3, 0, 1, 2, 4)
+    # D_i = rowsum(do * out): (nq, B, KV, G, Cq)
+    dsum = jnp.sum((do * out).astype(jnp.float32), axis=-1)
+    dsumc = dsum.reshape(b, nq, q_chunk, kv, g).transpose(1, 0, 3, 4, 2)
+
+    def q_step(carry, q_in):
+        dk_acc, dv_acc = carry            # (B, Sk, KV, D) f32
+        qi, q_blk, do_blk, lse_blk, d_blk = q_in
+
+        def kv_step(c2, kj):
+            dq_i, dk_acc, dv_acc = c2
+            k_blk = jax.lax.dynamic_index_in_dim(kc, kj, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vc, kj, 1, keepdims=False)
+            s = _blk_scores(q_blk, k_blk, scale, causal, qi, kj, q_chunk, kv_chunk)
+            p = jnp.exp(s - lse_blk[..., None])                       # (B,KV,G,Cq,Ck)
+            dv_c = jnp.einsum("bkgqc,bqkgd->bckd", p.astype(do_blk.dtype), do_blk)
+            dp = jnp.einsum("bqkgd,bckd->bkgqc", do_blk, v_blk).astype(jnp.float32)
+            ds = p * (dp - d_blk[..., None])                          # f32
+            dq_c = jnp.einsum("bkgqc,bckd->bqkgd", ds.astype(k_blk.dtype), k_blk)
+            dk_c = jnp.einsum("bkgqc,bqkgd->bckd", ds.astype(q_blk.dtype), q_blk)
+            if triangle and causal:
+                take = (kj * kv_chunk <= (qi * q_chunk + q_chunk - 1)).astype(jnp.float32)
+                dq_c = dq_c * take
+                dk_c = dk_c * take
+                dv_c = dv_c * take
+            dq_i = dq_i + dq_c.astype(jnp.float32) * scale
+            off = kj * kv_chunk
+            upd = lambda acc, c: jax.lax.dynamic_update_slice_in_dim(
+                acc, jax.lax.dynamic_slice_in_dim(acc, off, kv_chunk, 1)
+                + c.astype(jnp.float32), off, 1)
+            dk_acc = upd(dk_acc, dk_c * scale)
+            dv_acc = upd(dv_acc, dv_c)
+            return (dq_i, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, q_chunk, kv, g, d), jnp.float32)
+        (dq_i, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_i
+
+    dk0 = jnp.zeros((b, sk, kv, d), jnp.float32)
+    dv0 = jnp.zeros((b, sk, kv, d), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(
+        q_step, (dk0, dv0), (jnp.arange(nq), qc, doc, lsec, dsumc))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, d).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, q_chunk, kv_chunk, triangle):
+    out, _ = _flash_fwd(q, k, v, causal, q_chunk, kv_chunk, triangle)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, q_chunk, kv_chunk, triangle):
+    out, lse = _flash_fwd(q, k, v, causal, q_chunk, kv_chunk, triangle)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, q_chunk, kv_chunk, triangle, res, do):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, do, causal, q_chunk, kv_chunk, triangle)
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    triangle_schedule: bool = False,
+) -> jnp.ndarray:
+    """Blockwise attention with a FlashAttention-style custom VJP.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D); GQA via H % KV == 0.  The (S, S)
+    score matrix is never materialised in either pass: the forward saves only
+    (q, k, v, out, logsumexp) and the backward recomputes probabilities per
+    (q-block, kv-block) pair.  This is what keeps 32k-prefill and 4k-train
+    residency O(S·d) instead of O(S²).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    q_chunk = min(q_chunk, sq, max(sq // 16, 64))  # >=16 chunks: context-
+    kv_chunk = min(kv_chunk, sk)                   # parallel shard alignment
+    while sq % q_chunk:      # non-power-of-two sequence (e.g. image tokens)
+        q_chunk //= 2
+    while sk % kv_chunk:
+        kv_chunk //= 2
+    assert q_chunk >= 1 and kv_chunk >= 1
+    return _flash(q, k, v, causal, q_chunk, kv_chunk, triangle_schedule)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cur_len: jnp.ndarray,
+) -> jnp.ndarray:
+    """One-token attention. q: (B, 1, H, D); caches: (B, S, KV, D).
+
+    Works with the cache sequence dim sharded over the data axis: the max/sum
+    reductions over S lower to all-reduces, giving sequence-parallel decode.
+    """
+    b, _, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    g = h // kv
+    scale = d ** -0.5
+    qh = q.reshape(b, kv, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache).astype(jnp.float32) * scale
+    mask = jnp.arange(s)[None, :] < cur_len[:, None]          # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", (p / l).astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + qk-norm)
+# ---------------------------------------------------------------------------
+
+def attention_block(
+    x: jnp.ndarray,
+    params: dict,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    qk_norm: bool,
+    norm_eps: float,
+    positions: Optional[jnp.ndarray] = None,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    triangle_schedule: bool = False,
+) -> jnp.ndarray:
+    """Self-attention (or cross-attention when ``kv_override`` is given).
+
+    params: wq (D, H*hd), wk (D, KV*hd), wv (D, KV*hd), wo (H*hd, D)
+            [+ q_norm (hd,), k_norm (hd,) when qk_norm].
+    """
+    b, s, _ = x.shape
+    h, kvh, hd = num_heads, num_kv_heads, head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, params["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dq->bsq", x, params["wk"].astype(x.dtype)).reshape(b, s, kvh, hd)
+        v = jnp.einsum("bsd,dq->bsq", x, params["wv"].astype(x.dtype)).reshape(b, s, kvh, hd)
+        causal = True
+    else:
+        k, v = kv_override
+        causal = False
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"], norm_eps)
+        k = rms_norm(k, params["k_norm"], norm_eps)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if kv_override is None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    q, k, v = attn_partition(q, k, v, num_heads, num_kv_heads)
+    out = flash_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, triangle_schedule=triangle_schedule)
+    out = out.reshape(b, s, h * hd)
+    return jnp.einsum("bsq,qd->bsd", out, params["wo"].astype(x.dtype))

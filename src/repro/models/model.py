@@ -1,0 +1,473 @@
+"""Composable decoder LM covering all 10 assigned architectures.
+
+One functional :class:`Model` wraps a :class:`ModelConfig` and provides:
+
+* ``init(rng)`` / ``param_shapes()`` — parameter pytree (stacked-per-layer
+  leaves so the layer stack lowers as a single ``lax.scan``);
+* ``param_specs(mesh)`` — PartitionSpecs: FSDP over the batch axes
+  (``("pod","data")``) on the largest non-model dim + tensor/expert parallel
+  over ``model`` (heads / d_ff / experts / vocab), with divisibility-aware
+  fallbacks (e.g. KV heads replicate when kv_heads < model-axis size);
+* ``loss(params, batch)`` — next-token cross-entropy (+ MoE aux losses);
+* ``prefill(params, batch)`` / ``decode_step(params, cache, batch)`` — the
+  serving path with a per-layer KV / SSM-state cache.
+
+Block schedules per family are documented in ``ModelConfig``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain, constrain_residual
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    # Parameter construction
+    # ------------------------------------------------------------------
+    def init(self, rng: jax.Array) -> Params:
+        cfg = self.cfg
+        pdt = _dtype(cfg.param_dtype)
+        keys = iter(jax.random.split(rng, 64))
+
+        def dense(shape, scale_dim=None):
+            scale = (scale_dim or shape[-2] if len(shape) >= 2 else shape[-1]) ** -0.5
+            return (jax.random.normal(next(keys), shape, jnp.float32) * scale).astype(pdt)
+
+        d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+        params: Params = {
+            "embed": dense((v, d), scale_dim=d),
+            "final_norm": jnp.ones((d,), pdt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense((d, v))
+
+        def attn_params(n: int, cross: bool = False):
+            p = {
+                "wq": dense((n, d, cfg.attn_dim)),
+                "wk": dense((n, d, cfg.kv_dim)),
+                "wv": dense((n, d, cfg.kv_dim)),
+                "wo": dense((n, cfg.attn_dim, d), scale_dim=cfg.attn_dim),
+            }
+            if cfg.qk_norm:
+                p["q_norm"] = jnp.ones((n, cfg.head_dim), pdt)
+                p["k_norm"] = jnp.ones((n, cfg.head_dim), pdt)
+            return p
+
+        def mlp_params(n: int, f: int):
+            return {
+                "w_gate": dense((n, d, f)),
+                "w_up": dense((n, d, f)),
+                "w_down": dense((n, f, d), scale_dim=f),
+            }
+
+        def moe_params(n: int):
+            e, f = cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+            return {
+                "router": dense((n, d, e)),
+                "w_gate": dense((n, e, d, f)),
+                "w_up": dense((n, e, d, f)),
+                "w_down": dense((n, e, f, d), scale_dim=f),
+            }
+
+        def mamba_params(n: int):
+            din, ns, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+            k = cfg.ssm_conv
+            return {
+                "w_z": dense((n, d, din)),
+                "w_x": dense((n, d, din)),
+                "w_b": dense((n, d, ns)),
+                "w_c": dense((n, d, ns)),
+                "w_dt": dense((n, d, h)),
+                "conv_x": dense((n, k, din), scale_dim=k),
+                "conv_b": dense((n, k, ns), scale_dim=k),
+                "conv_c": dense((n, k, ns), scale_dim=k),
+                "a_log": jnp.zeros((n, h), pdt),
+                "dt_bias": jnp.zeros((n, h), pdt),
+                "d_skip": jnp.ones((n, h), pdt),
+                "norm": jnp.ones((n, din), pdt),
+                "w_out": dense((n, din, d), scale_dim=din),
+            }
+
+        fam = cfg.family
+        nl = cfg.num_layers
+        if fam in ("dense", "audio"):
+            params["blocks"] = {
+                "attn_norm": jnp.ones((nl, d), pdt),
+                "attn": attn_params(nl),
+                "mlp_norm": jnp.ones((nl, d), pdt),
+                "mlp": mlp_params(nl, ff),
+            }
+        elif fam == "moe":
+            params["blocks"] = {
+                "attn_norm": jnp.ones((nl, d), pdt),
+                "attn": attn_params(nl),
+                "mlp_norm": jnp.ones((nl, d), pdt),
+                "moe": moe_params(nl),
+            }
+            if cfg.dense_residual:
+                params["blocks"]["dense_mlp"] = mlp_params(nl, ff)
+        elif fam == "ssm":
+            params["blocks"] = {
+                "norm": jnp.ones((nl, d), pdt),
+                "mamba": mamba_params(nl),
+            }
+        elif fam == "hybrid":
+            params["blocks"] = {
+                "norm": jnp.ones((nl, d), pdt),
+                "mamba": mamba_params(nl),
+            }
+            sa = attn_params(1)
+            params["shared_attn"] = {
+                "attn_norm": jnp.ones((1, d), pdt),
+                "attn": sa,
+                "mlp_norm": jnp.ones((1, d), pdt),
+                "mlp": mlp_params(1, ff),
+            }
+        elif fam == "vlm":
+            n_cross = cfg.num_layers // (cfg.cross_attn_every + 1)
+            n_self = cfg.num_layers - n_cross
+            assert n_self == n_cross * cfg.cross_attn_every, (
+                "vlm layer count must decompose as n_cross * (cross_attn_every + 1)")
+            params["blocks"] = {
+                "attn_norm": jnp.ones((n_self, d), pdt),
+                "attn": attn_params(n_self),
+                "mlp_norm": jnp.ones((n_self, d), pdt),
+                "mlp": mlp_params(n_self, ff),
+            }
+            params["cross_blocks"] = {
+                "attn_norm": jnp.ones((n_cross, d), pdt),
+                "attn": attn_params(n_cross, cross=True),
+                "gate": jnp.zeros((n_cross,), pdt),
+                "mlp_norm": jnp.ones((n_cross, d), pdt),
+                "mlp": mlp_params(n_cross, ff),
+            }
+        else:
+            raise ValueError(fam)
+        return params
+
+    def param_shapes(self) -> Params:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def num_params(self) -> int:
+        return int(sum(np.prod(x.shape) for x in jax.tree.leaves(self.param_shapes())))
+
+    def num_active_params(self) -> int:
+        """Active parameters per token (MoE discounts inactive experts)."""
+        cfg = self.cfg
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.param_shapes())[0]:
+            size = int(np.prod(leaf.shape))
+            keys = [getattr(k, "key", "") for k in path]
+            if cfg.num_experts and any(k in ("w_gate", "w_up", "w_down") for k in keys) \
+                    and "moe" in keys:
+                size = size * cfg.experts_per_token // cfg.num_experts
+            total += size
+        return total
+
+    # ------------------------------------------------------------------
+    # Sharding
+    # ------------------------------------------------------------------
+    def param_specs(self, mesh, fsdp: Tuple[str, ...] = ("pod", "data"),
+                    tp: str = "model") -> Params:
+        """PartitionSpec tree matching ``param_shapes()``.
+
+        Every matrix is TP-sharded over ``model`` on its "parallel" dim and
+        FSDP-sharded over the batch axes on the opposite dim, with
+        divisibility checks falling back to replication.
+        """
+        cfg = self.cfg
+        fsdp = tuple(a for a in fsdp if a in mesh.shape)
+        fsdp_size = int(np.prod([mesh.shape[a] for a in fsdp])) if fsdp else 1
+        tp_size = int(mesh.shape[tp]) if tp in mesh.shape else 1
+
+        def ax_f(dim):  # FSDP axis if divisible
+            return fsdp if fsdp and dim % fsdp_size == 0 else None
+
+        def ax_t(dim):  # TP axis if divisible
+            return tp if tp_size > 1 and dim % tp_size == 0 else None
+
+        def mat(rows, cols, stacked=True, tp_on_cols=True):
+            a, bdim = (rows, cols)
+            if tp_on_cols:
+                spec = (ax_f(a), ax_t(bdim))
+            else:
+                spec = (ax_t(a), ax_f(bdim))
+            return P(*((None,) + spec if stacked else spec))
+
+        shapes = self.param_shapes()
+
+        def spec_for(path_keys, leaf) -> P:
+            ks = path_keys
+            shape = leaf.shape
+            name = ks[-1]
+            stacked = ks[0] in ("blocks", "cross_blocks", "shared_attn")
+            if name == "embed":
+                # Vocab-parallel (Megatron-style): V over TP so (a) lookups
+                # psum a small (tokens, D) instead of all-gathering the table,
+                # (b) the tied head yields vocab-sharded logits without the
+                # (tokens, V) all-reduce.
+                return P(ax_t(shape[0]), ax_f(shape[1]))
+            if name == "lm_head":
+                return P(ax_f(shape[0]), ax_t(shape[1]))
+            if name == "final_norm":
+                return P(None)
+            s, body = (shape[1:], True) if stacked else (shape, False)
+
+            def wrap(*spec):
+                return P(*(((None,) + spec) if body else spec))
+
+            if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_z", "w_x",
+                        "w_b", "w_c", "w_dt"):
+                if len(s) == 3:  # MoE expert weights (E, D, F)
+                    return wrap(ax_t(s[0]), ax_f(s[1]), None)
+                return wrap(ax_f(s[0]), ax_t(s[1]))
+            if name in ("wo", "w_down", "w_out"):
+                if len(s) == 3:  # (E, F, D)
+                    return wrap(ax_t(s[0]), None, ax_f(s[1]))
+                return wrap(ax_t(s[0]), ax_f(s[1]))
+            if name == "router":
+                return wrap(ax_f(s[0]), None)
+            if name == "conv_x":
+                return wrap(None, ax_t(s[1]))
+            if name in ("conv_b", "conv_c"):
+                # N is tiny and shared across heads; sharding it makes the
+                # SSD chunk quadratics partial-sum over `model` (huge psums).
+                return wrap(None, None)
+            if name in ("a_log", "dt_bias", "d_skip", "norm"):
+                return wrap(ax_t(s[0]))
+            if name in ("attn_norm", "mlp_norm", "q_norm", "k_norm"):
+                return wrap(None)
+            if name == "gate":
+                return wrap() if len(s) == 0 else wrap(None)
+            raise ValueError(f"no spec rule for {ks} {shape}")
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+        specs = [spec_for(tuple(getattr(k, "key", str(k)) for k in path), leaf)
+                 for path, leaf in flat]
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    # ------------------------------------------------------------------
+    # Forward (training / prefill)
+    # ------------------------------------------------------------------
+    def _attn_mlp_body(self, x, blk, *, q_chunk=512, kv_chunk=512,
+                       triangle=False, return_kv=False):
+        cfg = self.cfg
+        h = L.attention_block(
+            constrain_residual(L.rms_norm(x, blk["attn_norm"], cfg.norm_eps)), blk["attn"],
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, triangle_schedule=triangle)
+        x = constrain_residual(x + h)
+        return x
+
+    def _mlp(self, x, blk):
+        cfg = self.cfg
+        h = L.swiglu(constrain_residual(L.rms_norm(x, blk["mlp_norm"], cfg.norm_eps)),
+                     blk["mlp"]["w_gate"], blk["mlp"]["w_up"], blk["mlp"]["w_down"])
+        return constrain_residual(x + h)
+
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray],
+                *, triangle: bool = False) -> Tuple[jnp.ndarray, dict]:
+        """Returns (logits (B, S, V), aux metrics)."""
+        cfg = self.cfg
+        cdt = _dtype(cfg.dtype)
+        if cfg.frame_inputs:
+            x = batch["frame_embeds"].astype(cdt)
+        else:
+            x = params["embed"].astype(cdt)[batch["tokens"]]
+        x = constrain_residual(x)
+        aux: dict = {}
+        fam = cfg.family
+
+        if fam in ("dense", "audio"):
+            x = self._scan_dense(params["blocks"], x, triangle)
+        elif fam == "moe":
+            x, aux = self._scan_moe(params["blocks"], x, triangle)
+        elif fam == "ssm":
+            x = self._scan_ssm(params["blocks"], x)
+        elif fam == "hybrid":
+            x = self._scan_hybrid(params, x, triangle)
+        elif fam == "vlm":
+            x = self._scan_vlm(params, x, batch["image_embeds"].astype(cdt), triangle)
+        else:
+            raise ValueError(fam)
+
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt))
+        logits = constrain(logits, ("batch", None, "tp"))
+        return logits, aux
+
+    # --- per-family layer stacks (lax.scan over stacked params) ---
+
+    def _maybe_remat(self, f):
+        return jax.checkpoint(f, prevent_cse=False) if self.cfg.remat else f
+
+    def _scan_dense(self, blocks, x, triangle):
+        def body(x, blk):
+            x = self._attn_mlp_body(x, blk, triangle=triangle)
+            x = self._mlp(x, blk)
+            return x, None
+
+        x, _ = jax.lax.scan(self._maybe_remat(body), x, blocks)
+        return x
+
+    def _scan_moe(self, blocks, x, triangle):
+        cfg = self.cfg
+
+        def body(carry, blk):
+            x, aux_acc = carry
+            x = self._attn_mlp_body(x, blk, triangle=triangle)
+            h = L.rms_norm(x, blk["mlp_norm"], cfg.norm_eps)
+            mo, aux = moe_lib.moe_block(
+                h, blk["moe"], num_experts=cfg.num_experts,
+                k=cfg.experts_per_token, capacity_factor=cfg.capacity_factor)
+            if cfg.dense_residual:
+                mo = mo + L.swiglu(h, blk["dense_mlp"]["w_gate"],
+                                   blk["dense_mlp"]["w_up"], blk["dense_mlp"]["w_down"])
+            x = x + mo
+            aux_acc = jax.tree.map(jnp.add, aux_acc,
+                                   jax.tree.map(lambda v: v.astype(jnp.float32), aux))
+            return (x, aux_acc), None
+
+        aux0 = {"moe_aux_loss": jnp.float32(0), "moe_z_loss": jnp.float32(0),
+                "moe_dropped": jnp.float32(0)}
+        (x, aux), _ = jax.lax.scan(self._maybe_remat(body), (x, aux0), blocks)
+        aux = jax.tree.map(lambda v: v / cfg.num_layers, aux)
+        return x, aux
+
+    def _ssm_body(self, x, blk):
+        cfg = self.cfg
+        h, _ = ssm_lib.mamba2_block(
+            constrain_residual(L.rms_norm(x, blk["norm"], cfg.norm_eps)), blk["mamba"],
+            d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+            chunk=cfg.ssm_chunk, norm_eps=cfg.norm_eps)
+        return constrain_residual(x + h)
+
+    def _scan_ssm(self, blocks, x):
+        def body(x, blk):
+            return self._ssm_body(x, blk), None
+
+        x, _ = jax.lax.scan(self._maybe_remat(body), x, blocks)
+        return x
+
+    def _shared_attn_apply(self, shared, x, triangle):
+        blk = jax.tree.map(lambda a: a[0], shared)
+        x = self._attn_mlp_body(x, blk, triangle=triangle)
+        x = self._mlp(x, blk)
+        return x
+
+    def _scan_hybrid(self, params, x, triangle):
+        cfg = self.cfg
+        nl, period = cfg.num_layers, cfg.attn_every
+        n_groups, tail = nl // period, nl % period
+        blocks = params["blocks"]
+        main = jax.tree.map(lambda a: a[: n_groups * period].reshape(
+            (n_groups, period) + a.shape[1:]), blocks)
+        rest = jax.tree.map(lambda a: a[n_groups * period:], blocks)
+
+        def group_body(x, grp):
+            x = self._shared_attn_apply(params["shared_attn"], x, triangle)
+
+            def layer_body(x, blk):
+                return self._ssm_body(x, blk), None
+
+            x, _ = jax.lax.scan(self._maybe_remat(layer_body), x, grp)
+            return x, None
+
+        x, _ = jax.lax.scan(group_body, x, main)
+        if tail:
+            def layer_body(x, blk):
+                return self._ssm_body(x, blk), None
+
+            x, _ = jax.lax.scan(self._maybe_remat(layer_body), x, rest)
+        return x
+
+    def _scan_vlm(self, params, x, image_embeds, triangle):
+        cfg = self.cfg
+        blocks, cross = params["blocks"], params["cross_blocks"]
+        n_cross = jax.tree.leaves(cross)[0].shape[0]
+        per = cfg.cross_attn_every
+        self_grouped = jax.tree.map(
+            lambda a: a.reshape((n_cross, per) + a.shape[1:]), blocks)
+
+        def cross_body(x, cblk):
+            b, s, _ = x.shape
+            h = L.rms_norm(x, cblk["attn_norm"], cfg.norm_eps)
+            ni = image_embeds.shape[1]
+            kvh, hd = cfg.num_kv_heads, cfg.head_dim
+            k = jnp.einsum("bnd,dq->bnq", image_embeds,
+                           cblk["attn"]["wk"].astype(x.dtype)).reshape(b, ni, kvh, hd)
+            v = jnp.einsum("bnd,dq->bnq", image_embeds,
+                           cblk["attn"]["wv"].astype(x.dtype)).reshape(b, ni, kvh, hd)
+            h = L.attention_block(
+                h, cblk["attn"], num_heads=cfg.num_heads, num_kv_heads=kvh,
+                head_dim=hd, rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                norm_eps=cfg.norm_eps, kv_override=(k, v))
+            x = x + jnp.tanh(cblk["gate"]).astype(x.dtype) * h
+            h2 = L.swiglu(L.rms_norm(x, cblk["mlp_norm"], cfg.norm_eps),
+                          cblk["mlp"]["w_gate"], cblk["mlp"]["w_up"],
+                          cblk["mlp"]["w_down"])
+            return x + jnp.tanh(cblk["gate"]).astype(x.dtype) * h2
+
+        def group_body(x, grp_and_cross):
+            grp, cblk = grp_and_cross
+
+            def layer_body(x, blk):
+                x = self._attn_mlp_body(x, blk, triangle=triangle)
+                x = self._mlp(x, blk)
+                return x, None
+
+            x, _ = jax.lax.scan(self._maybe_remat(layer_body), x, grp)
+            x = cross_body(x, cblk)
+            return x, None
+
+        x, _ = jax.lax.scan(group_body, x, (self_grouped, cross))
+        return x
+
+    # ------------------------------------------------------------------
+    # Loss
+    # ------------------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray],
+             *, triangle: bool = False) -> Tuple[jnp.ndarray, dict]:
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, triangle=triangle)
+        logits = logits.astype(jnp.float32)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        nll = logz - gold
+        mask = batch.get("loss_mask")
+        if mask is None:
+            loss = jnp.mean(nll)
+        else:
+            loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        metrics = {"nll": loss, **aux}
+        if "moe_aux_loss" in aux:
+            loss = loss + cfg.aux_loss_coef * aux["moe_aux_loss"] \
+                        + cfg.router_z_coef * aux["moe_z_loss"]
+        metrics["loss"] = loss
+        return loss, metrics

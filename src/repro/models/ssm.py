@@ -1,0 +1,193 @@
+"""Mamba2 / SSD (state-space duality) blocks — training scan + O(1) decode.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060 (ngroups=1):
+within a chunk the recurrence is evaluated as a masked quadratic form
+(MXU-friendly); across chunks a small recurrence propagates the (H, P, N)
+states.  Decode is the exact single-step recurrence against a carried
+(conv_state, ssm_state) cache — this is what makes the ``long_500k`` shape
+O(1) per token for the SSM/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import rms_norm
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., L) log-decays -> (..., L, L) with [i, j] = sum_{k=j+1..i} a_k
+    for i >= j, -inf above the diagonal."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    idx = jnp.arange(l)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(
+    x: jnp.ndarray,       # (B, S, H, P) — inputs, *already* scaled by dt
+    a: jnp.ndarray,       # (B, S, H)    — log decay per step (dt * A, <= 0)
+    bmat: jnp.ndarray,    # (B, S, N)
+    cmat: jnp.ndarray,    # (B, S, N)
+    chunk: int,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Returns (y (B, S, H, P), final_state (B, H, P, N))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)    # (B, H, nc, L)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+
+    a_cs = jnp.cumsum(ac, axis=-1)                            # (B, H, nc, L)
+    ldec = jnp.exp(_segsum(ac))                               # (B, H, nc, L, L)
+
+    # 1) intra-chunk (quadratic, MXU-heavy)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cc, bc, ldec.astype(cc.dtype), xc)
+
+    # 2) per-chunk output states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)             # (B, H, nc, L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        bc, decay_states.astype(bc.dtype), xc)
+
+    # 3) inter-chunk recurrence over the nc chunk states (sequential scan —
+    #    O(nc) with tiny state; avoids the (nc+1)^2 decay matrix so the same
+    #    code path serves 4k training and 512k prefill).
+    chunk_decay = jnp.exp(a_cs[..., -1])                      # (B, H, nc)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), x.dtype)
+
+    def step(carry, inp):
+        st, dec = inp                                         # (B,H,P,N), (B,H)
+        carry_new = carry * dec[..., None, None].astype(carry.dtype) + st
+        return carry_new, carry                               # emit state *entering* chunk
+
+    (final_state, prev_states) = jax.lax.scan(
+        step,
+        initial_state,
+        (states.transpose(1, 0, 2, 3, 4),                     # (nc, B, H, P, N)
+         chunk_decay.transpose(2, 0, 1)),                     # (nc, B, H)
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B, nc, H, P, N)
+
+    # 4) inter-chunk contribution to outputs
+    state_decay_out = jnp.exp(a_cs)                           # (B, H, nc, L)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       cc, prev_states, state_decay_out.astype(cc.dtype))
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C).
+
+    With ``state`` ((B, K-1, C), the trailing inputs of the previous step) the
+    function also returns the new state — used by decode.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return out, new_state
+
+
+def mamba2_block(
+    x: jnp.ndarray,
+    params: dict,
+    *,
+    d_state: int,
+    head_dim: int,
+    chunk: int,
+    norm_eps: float,
+    cache: Optional[dict] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B, S, D) -> (B, S, D). ``cache`` enables single-step decode.
+
+    params (projections kept separate so tensor-parallel shard boundaries
+    align with component boundaries — heads/Din shard over ``model``, the
+    shared B/C streams stay replicated):
+      w_z, w_x (D, Din); w_b, w_c (D, N); w_dt (D, H);
+      conv_x (K, Din); conv_b, conv_c (K, N);
+      a_log, dt_bias, d_skip (H,); norm (Din,); w_out (Din, D).
+    """
+    b, s, d = x.shape
+    d_in = params["w_out"].shape[0]
+    h = d_in // head_dim
+    n = d_state
+
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"].astype(x.dtype))
+    xs_pre = jnp.einsum("bsd,de->bse", x, params["w_x"].astype(x.dtype))
+    b_pre = jnp.einsum("bsd,dn->bsn", x, params["w_b"].astype(x.dtype))
+    c_pre = jnp.einsum("bsd,dn->bsn", x, params["w_c"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["w_dt"].astype(x.dtype))
+
+    # Depthwise causal conv commutes with the channel split, so each stream
+    # carries its own small conv (and its own decode state).
+    cx = cache["conv_x"] if cache is not None else None
+    cb = cache["conv_b"] if cache is not None else None
+    ccs = cache["conv_c"] if cache is not None else None
+    xs, new_cx = _causal_conv(xs_pre, params["conv_x"], cx)
+    bmat, new_cb = _causal_conv(b_pre, params["conv_b"], cb)
+    cmat, new_cc = _causal_conv(c_pre, params["conv_c"], ccs)
+    xs = constrain(jax.nn.silu(xs), ("batch", None, "tp"))
+    bmat = jax.nn.silu(bmat)
+    cmat = jax.nn.silu(cmat)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))          # (H,), negative
+    log_decay = dt * a[None, None, :]                          # (B, S, H)
+
+    xh = xs.reshape(b, s, h, head_dim)
+    x_scaled = constrain(xh * dt[..., None].astype(xh.dtype),
+                         ("batch", None, "tp", None))
+
+    if cache is None:
+        y, final_state = ssd_scan(x_scaled, log_decay, bmat, cmat, chunk)
+        # Decode-ready states: trailing (K-1) pre-activation conv inputs +
+        # the final SSM state.  Returned so prefill fills the cache in one
+        # pass (no recomputation).
+        k_w = params["conv_x"].shape[0]
+        new_cache = {
+            "conv_x": xs_pre[:, -(k_w - 1):, :],
+            "conv_b": b_pre[:, -(k_w - 1):, :],
+            "conv_c": c_pre[:, -(k_w - 1):, :],
+            "ssm": final_state,
+        }
+    else:
+        # O(1) decode recurrence: state' = exp(dt*a)*state + dt*B (x ⊗)
+        st = cache["ssm"]                                     # (B, H, P, N)
+        dec = jnp.exp(log_decay[:, 0, :])                     # (B, H)
+        upd = jnp.einsum("bhp,bn->bhpn", x_scaled[:, 0], bmat[:, 0])
+        st = st * dec[..., None, None].astype(st.dtype) + upd
+        y = jnp.einsum("bhpn,bn->bhp", st, cmat[:, 0])[:, None]  # (B, 1, H, P)
+        final_state = st
+        new_cache = {"conv_x": new_cx, "conv_b": new_cb, "conv_c": new_cc,
+                     "ssm": final_state}
+
+    y = y + xh * params["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y, params["norm"], norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return out, new_cache

@@ -1,0 +1,4 @@
+"""Training substrate: optimizers, train step, gradient compression."""
+
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import init_state, jit_train_step, make_train_step, state_specs

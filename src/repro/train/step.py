@@ -1,0 +1,133 @@
+"""Train state + the pjit train step (with microbatch gradient accumulation).
+
+The step is a pure function ``(state, batch) -> (state, metrics)`` suitable
+for ``jax.jit(..., in_shardings=..., out_shardings=..., donate_argnums=0)``.
+Sharding specs for the full state come from :func:`state_specs` (params from
+``Model.param_specs``, optimizer state mirroring them — i.e. ZeRO-sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import Model
+from repro.train import optimizer as opt_lib
+from repro.train.optimizer import OptimizerConfig
+
+
+def init_state(model: Model, opt_cfg: OptimizerConfig, rng: jax.Array) -> Dict[str, Any]:
+    params = model.init(rng)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "params": params,
+        "opt": opt_lib.opt_init(opt_cfg, params),
+    }
+
+
+def state_shapes(model: Model, opt_cfg: OptimizerConfig) -> Dict[str, Any]:
+    return jax.eval_shape(lambda: init_state(model, opt_cfg, jax.random.PRNGKey(0)))
+
+
+def state_specs(model: Model, opt_cfg: OptimizerConfig, mesh,
+                fsdp: Tuple[str, ...] = ("pod", "data"), tp: str = "model"):
+    pspecs = model.param_specs(mesh, fsdp=fsdp, tp=tp)
+    return {
+        "step": P(),
+        "params": pspecs,
+        "opt": opt_lib.opt_state_specs(opt_cfg, pspecs),
+    }
+
+
+def batch_specs(model: Model, mesh, batch_axes: Tuple[str, ...] = ("pod", "data")):
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+    cfg = model.cfg
+    specs: Dict[str, P] = {}
+    if cfg.frame_inputs:
+        specs["frame_embeds"] = P(axes, None, None)
+    else:
+        specs["tokens"] = P(axes, None)
+    specs["labels"] = P(axes, None)
+    if cfg.family == "vlm":
+        specs["image_embeds"] = P(axes, None, None)
+    return specs
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    *, microbatches: int = 1, triangle: bool = False,
+                    batch_axes: Tuple[str, ...] = ("pod", "data")):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` accumulates gradients over sequential microbatch
+    slices (lax.scan) — smaller live activation footprint, same math.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, triangle=triangle)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def mb_slice(b, i):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // microbatches), x.shape[0] // microbatches, 0),
+                b)
+
+        def body(carry, i):
+            loss_acc, metrics_acc, g_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb_slice(batch, i))
+            g_acc = jax.tree.map(jnp.add, g_acc, grads)
+            metrics_acc = jax.tree.map(jnp.add, metrics_acc, metrics)
+            return (loss_acc + loss, metrics_acc, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        metrics_shape = jax.eval_shape(loss_fn, params, mb_slice(batch, jnp.int32(0)))[1]
+        m0 = jax.tree.map(lambda m: jnp.zeros(m.shape, m.dtype), metrics_shape)
+        (loss_sum, metrics_sum, grads), _ = jax.lax.scan(
+            body, (jnp.float32(0), m0, g0), jnp.arange(microbatches))
+        inv = 1.0 / microbatches
+        return (loss_sum * inv,
+                jax.tree.map(lambda m: m * inv, metrics_sum),
+                jax.tree.map(lambda g: g * inv, grads))
+
+    def train_step(state, batch):
+        params = state["params"]
+        loss, metrics, grads = grads_of(params, batch)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, opt_cfg.grad_clip)
+        new_params, new_opt, lr = opt_lib.opt_update(
+            opt_cfg, params, grads, state["opt"], state["step"])
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        new_state = {"step": state["step"] + 1, "params": new_params, "opt": new_opt}
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(model: Model, opt_cfg: OptimizerConfig, mesh,
+                   *, microbatches: int = 1, triangle: bool = False,
+                   fsdp: Tuple[str, ...] = ("pod", "data"), tp: str = "model",
+                   donate: bool = True):
+    """The fully-specified pjit'd step (used by launch/train.py and dryrun)."""
+    from jax.sharding import NamedSharding
+
+    sspecs = state_specs(model, opt_cfg, mesh, fsdp=fsdp, tp=tp)
+    bspecs = batch_specs(model, mesh, batch_axes=fsdp)
+    step = make_train_step(model, opt_cfg, microbatches=microbatches, triangle=triangle)
+    metric_specs = None  # replicated metrics
+    return jax.jit(
+        step,
+        in_shardings=(sspecs, bspecs),
+        out_shardings=(sspecs, metric_specs),
+        donate_argnums=(0,) if donate else (),
+    ), sspecs, bspecs

@@ -1,0 +1,27 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests and benchmarks must see the
+single real CPU device; only the dry-run process forces 512 placeholders.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.collection import from_lists, preprocess
+from repro.data.collections import uniform_collection, with_duplicates
+
+
+@pytest.fixture(scope="session")
+def small_collection():
+    """~200 sets with planted near-duplicate clusters (non-empty join)."""
+    base = uniform_collection(n_sets=160, avg_size=12, n_tokens=300, seed=1)
+    return with_duplicates(base, n_clusters=10, cluster_size=3, jaccard=0.85, seed=2)
+
+
+@pytest.fixture(scope="session")
+def tiny_collection():
+    rng = np.random.default_rng(3)
+    sets = [rng.choice(80, size=rng.integers(2, 14), replace=False).tolist()
+            for _ in range(60)]
+    sets += [sets[i][:-1] + [81 + i] for i in range(0, 20, 2)]  # near-dups
+    return preprocess(from_lists(sets))

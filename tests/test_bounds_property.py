@@ -1,0 +1,81 @@
+"""Property tests for Theorem 1 — the exactness core of the paper.
+
+For every bitmap generation method and any pair of sets, the Eq. 2 upper
+bound must dominate the true overlap (no false negatives, ever)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitmap as bm
+from repro.core import bounds
+from repro.core.constants import BITMAP_METHODS, PAD_TOKEN
+
+_LUT = np.unpackbits(np.arange(256, dtype=np.uint8)[:, None], axis=1).sum(1)
+
+
+def _pair_to_padded(r, s):
+    r = sorted(set(r))
+    s = sorted(set(s))
+    l = max(len(r), len(s), 1)
+    toks = np.full((2, l), PAD_TOKEN, dtype=np.int32)
+    toks[0, : len(r)] = r
+    toks[1, : len(s)] = s
+    return toks, np.array([len(r), len(s)], dtype=np.int32)
+
+
+sets_strategy = st.lists(st.integers(0, 500), min_size=0, max_size=60)
+
+
+@pytest.mark.parametrize("method", BITMAP_METHODS)
+@pytest.mark.parametrize("b", [32, 64, 128])
+@settings(max_examples=30, deadline=None)
+@given(r=sets_strategy, s=sets_strategy)
+def test_eq2_upper_bound_holds(method, b, r, s):
+    toks, lens = _pair_to_padded(r, s)
+    words = np.asarray(bm.generate_bitmaps(
+        jnp.asarray(toks), jnp.asarray(lens), b, method=method))
+    ham = int(_LUT[(words[0] ^ words[1]).view(np.uint8)].sum())
+    ub = bounds.overlap_upper_bound(int(lens[0]), int(lens[1]), ham)
+    true_overlap = len(set(r) & set(s))
+    assert true_overlap <= ub, (method, b, true_overlap, ub)
+
+
+@settings(max_examples=50, deadline=None)
+@given(r=sets_strategy.filter(lambda x: len(set(x)) >= 1),
+       s=sets_strategy.filter(lambda x: len(set(x)) >= 1),
+       sim=st.sampled_from(["jaccard", "cosine", "dice"]),
+       tau=st.floats(0.1, 0.95))
+def test_equivalent_overlap_matches_similarity(r, s, sim, tau):
+    """o >= equivalent_overlap  <=>  sim >= tau (Table 1)."""
+    rs, ss = set(r), set(s)
+    o = len(rs & ss)
+    lr, ls = len(rs), len(ss)
+    simval = float(bounds.similarity(sim, o, lr, ls))
+    need = float(bounds.equivalent_overlap(sim, tau, lr, ls))
+    assert (simval >= tau - 1e-12) == (o >= need - 1e-9), (o, need, simval, tau)
+
+
+@settings(max_examples=50, deadline=None)
+@given(r=sets_strategy.filter(lambda x: len(set(x)) >= 1),
+       s=sets_strategy.filter(lambda x: len(set(x)) >= 1),
+       sim=st.sampled_from(["jaccard", "cosine", "dice"]),
+       tau=st.floats(0.1, 0.95))
+def test_length_filter_never_prunes_similar(r, s, sim, tau):
+    rs, ss = set(r), set(s)
+    o = len(rs & ss)
+    lr, ls = len(rs), len(ss)
+    if float(bounds.similarity(sim, o, lr, ls)) >= tau:
+        lo, hi = bounds.length_bounds(sim, tau, lr)
+        assert lo - 1e-9 <= ls <= hi + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(r=sets_strategy.filter(lambda x: len(set(x)) >= 2),
+       sim=st.sampled_from(["overlap", "jaccard", "cosine", "dice"]),
+       tau=st.floats(0.2, 0.95))
+def test_prefix_length_bounds(r, sim, tau):
+    n = len(set(r))
+    p = int(bounds.prefix_length(sim, tau if sim != "overlap" else max(1, int(tau * n)), n))
+    assert 0 <= p <= n

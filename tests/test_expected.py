@@ -1,0 +1,71 @@
+"""Eq. 4-6 closed forms, Monte-Carlo agreement (paper §3.4), cutoff points
+and the Bitmap-Combined crossovers (paper constants)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import expected
+from repro.core.bitmap import choose_method
+from repro.core.constants import BITMAP_NEXT, BITMAP_SET, BITMAP_XOR
+
+
+def test_xor_closed_form_equals_printed_sum():
+    """Our parity closed form == the paper's explicit odd-k binomial sum."""
+    for b in (32, 64, 128):
+        for n in (1, 3, 10, 40):
+            closed = float(expected.expected_bound_xor(b, n))
+            printed = expected.expected_bound_xor_sum(b, n)
+            assert math.isclose(closed, printed, rel_tol=1e-10), (b, n)
+
+
+@pytest.mark.parametrize("method", [BITMAP_SET, BITMAP_XOR, BITMAP_NEXT])
+def test_monte_carlo_matches_equations(method):
+    """Paper reports avg error ~0.012%; we allow MC noise at 4k trials.
+    Eq. 6 (Next) is itself the paper's *approximation* min(n²/b, n) — its
+    intrinsic error at small n is ~1-2%, so it gets a looser band."""
+    tol = 0.03 if method == BITMAP_NEXT else 0.01
+    for n in (8, 40, 100):
+        ana = float(expected.expected_bound(method, 64, n))
+        mc = expected.monte_carlo_expected_bound(method, 64, n, trials=4000)
+        assert abs(ana - mc) / max(ana, 1e-9) < tol, (method, n, ana, mc)
+
+
+def test_combined_crossovers_match_paper():
+    """Paper Alg. 6: Next below 0.56, Set in (0.56, 0.73), Xor above 0.73 —
+    on the normalised-overlap scale (see expected.py docstring)."""
+    lo, hi = expected.combined_crossovers_normalized(64)
+    assert abs(lo - 0.56) < 0.02, lo
+    assert abs(hi - 0.73) < 0.02, hi
+
+
+def test_cutoff_values_match_paper_fig6():
+    """Paper §3.5: b=1024, tau_j=0.9 -> Set cutoff 2129, Xor 4983 (2.3x);
+    at tau_j=0.8 the ratio is 1.47x."""
+    cs = expected.cutoff_point(BITMAP_SET, 1024, 0.9)
+    cx = expected.cutoff_point(BITMAP_XOR, 1024, 0.9)
+    assert abs(cs - 2129) <= 2, cs
+    assert abs(cx - 4983) / 4983 < 0.03, cx
+    assert abs(cx / cs - 2.3) < 0.1
+    r8 = expected.cutoff_point(BITMAP_XOR, 1024, 0.8) / expected.cutoff_point(
+        BITMAP_SET, 1024, 0.8)
+    assert abs(r8 - 1.47) < 0.02, r8
+
+
+def test_choose_method_regions():
+    b = 64
+    lo, hi = expected.combined_crossovers(b)
+    assert choose_method(lo - 0.02, b) == BITMAP_NEXT
+    assert choose_method((lo + hi) / 2, b) == BITMAP_SET
+    assert choose_method(hi + 0.02, b) == BITMAP_XOR
+    # Paper experiments: tau_j in [0.5, 0.95] should mostly pick Xor
+    # (Fig. 10: "Bitmap-Xor was consistently the best option").
+    assert choose_method(0.8, b) == BITMAP_XOR
+    assert choose_method(0.6, b) == BITMAP_XOR
+
+
+def test_cutoff_monotonic_in_b():
+    for m in (BITMAP_SET, BITMAP_XOR, BITMAP_NEXT):
+        cuts = [expected.cutoff_point(m, b, 0.8) for b in (64, 256, 1024)]
+        assert cuts == sorted(cuts), (m, cuts)
