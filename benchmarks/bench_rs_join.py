@@ -1,0 +1,93 @@
+"""R×S two-collection join vs self-join: throughput and filter ratios.
+
+The paper defines the join over two collections R and S; this benchmark
+measures (a) the blocked device join on an R×S workload vs a self-join over
+R ∪ S of the same total size (the R×S walk visits |R|·|S| block pairs instead
+of (|R|+|S|)²/2 — the win of knowing the problem is bipartite), and (b) the
+bitmap filter ratio on both, which Table 9's effectiveness claim extends to
+the two-collection case.  A PPJoin R×S run anchors the CPU side.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import cpu_algos, join
+from repro.core.collection import Collection, from_lists, preprocess_rs
+from repro.core.constants import PAD_TOKEN
+from repro.core.filters import BitmapFilter
+
+TAUS = (0.5, 0.7, 0.9)
+
+
+def _two_shards(n_r: int, n_s: int, seed: int = 0):
+    """Two raw shards in one token universe, relabelled with the shared
+    frequency order (per-collection `preprocess` would split the order)."""
+    rng = np.random.default_rng(seed)
+
+    def draw(n):
+        sizes = np.maximum(rng.poisson(12, size=n), 1)
+        return [np.unique(rng.integers(0, 800, size=2 * sz + 8))[:sz].tolist()
+                for sz in sizes]
+
+    sets_r = draw(n_r)
+    sets_s = draw(n_s)
+    # plant cross-shard near-dups so result sets are non-trivial
+    for k in range(min(n_s // 20, len(sets_r))):
+        sets_s[k] = sets_r[k]
+    return preprocess_rs(from_lists(sets_r), from_lists(sets_s))
+
+
+def _concat(col_r: Collection, col_s: Collection) -> Collection:
+    width = max(col_r.max_len, col_s.max_len)
+
+    def pad(c):
+        t = np.full((c.num_sets, width), PAD_TOKEN, dtype=c.tokens.dtype)
+        t[:, :c.max_len] = c.tokens
+        return t
+
+    return Collection(tokens=np.concatenate([pad(col_r), pad(col_s)]),
+                      lengths=np.concatenate([col_r.lengths, col_s.lengths]))
+
+
+def run() -> List[Row]:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    n_r, n_s = (400, 200) if smoke else (2000, 1000)
+    col_r, col_s = _two_shards(n_r, n_s)
+    both = _concat(col_r, col_s)
+    rows: List[Row] = []
+    for tau in TAUS:
+        # warm (compile) then measure
+        join.blocked_bitmap_join(col_r, col_s, "jaccard", tau, b=128, block=2048)
+        t0 = time.perf_counter()
+        rs_pairs, rs_stats = join.blocked_bitmap_join(
+            col_r, col_s, "jaccard", tau, b=128, block=2048, return_stats=True)
+        rs_t = time.perf_counter() - t0
+
+        join.blocked_bitmap_join(both, "jaccard", tau, b=128, block=2048)
+        t0 = time.perf_counter()
+        _, self_stats = join.blocked_bitmap_join(
+            both, "jaccard", tau, b=128, block=2048, return_stats=True)
+        self_t = time.perf_counter() - t0
+
+        bf = BitmapFilter.build_rs(col_r.tokens, col_r.lengths,
+                                   col_s.tokens, col_s.lengths,
+                                   "jaccard", tau, b=128)
+        t0 = time.perf_counter()
+        cpu_algos.ppjoin(col_r, col_s, "jaccard", tau, bitmap=bf)
+        cpu_t = time.perf_counter() - t0
+
+        rows.append(Row(
+            f"rs_join_device_tau{tau}", rs_t * 1e6,
+            f"pairs={len(rs_pairs)} filter_ratio={rs_stats.filter_ratio:.4f} "
+            f"self_join_RuS={self_t*1e6:.0f}us "
+            f"self_filter_ratio={self_stats.filter_ratio:.4f}"))
+        rows.append(Row(
+            f"rs_join_ppjoin_bf_tau{tau}", cpu_t * 1e6,
+            f"device_speedup={cpu_t/max(rs_t, 1e-9):.2f}x"))
+    return rows

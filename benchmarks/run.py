@@ -1,11 +1,16 @@
 """Benchmark driver — one module per paper table/figure.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [module-substring ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--smoke] [module-substring ...]
 Prints ``name,us_per_call,derived`` CSV rows.
+
+``--smoke`` runs a fast subset (and tells modules that honour
+``REPRO_BENCH_SMOKE`` to shrink their collections) — used by
+``scripts/check.sh`` as a does-the-benchmark-stack-still-run gate.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 
@@ -17,17 +22,27 @@ MODULES = [
     "benchmarks.bench_generation_methods", # Fig. 10
     "benchmarks.bench_precision",          # Fig. 11
     "benchmarks.bench_device_join",        # Table 10
+    "benchmarks.bench_rs_join",            # R×S vs self-join
     "benchmarks.bench_kernels",            # kernel roofline (DESIGN §6)
+]
+
+SMOKE_MODULES = [
+    "benchmarks.bench_expected_bounds",
+    "benchmarks.bench_rs_join",
 ]
 
 
 def main() -> None:
     import importlib
 
+    smoke = "--smoke" in sys.argv[1:]
     filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    modules = SMOKE_MODULES if smoke and not filters else MODULES
+    if smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     print("name,us_per_call,derived")
     t_all = time.time()
-    for modname in MODULES:
+    for modname in modules:
         if filters and not any(f in modname for f in filters):
             continue
         t0 = time.time()

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Fast local gate: tier-1 tests + benchmark smoke.
+#
+#   scripts/check.sh          # fast: skip slow-marked multidevice/driver tests
+#   scripts/check.sh --full   # full tier-1 suite (what the CI/driver runs)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--full" ]]; then
+    python -m pytest -x -q
+else
+    python -m pytest -x -q -m "not slow"
+fi
+
+python -m benchmarks.run --smoke

@@ -10,7 +10,13 @@ Public surface:
 * :mod:`repro.core.cpu_algos` — faithful AllPairs/PPJoin/GroupJoin/AdaptJoin.
 """
 
-from repro.core.collection import Collection, from_lists, pad_collection, preprocess
+from repro.core.collection import (
+    Collection,
+    from_lists,
+    pad_collection,
+    preprocess,
+    preprocess_rs,
+)
 from repro.core.constants import (
     BITMAP_COMBINED,
     BITMAP_METHODS,

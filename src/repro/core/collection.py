@@ -72,6 +72,46 @@ def from_lists(sets: Sequence[Iterable[int]], pad_to: int | None = None) -> Coll
     return Collection(tokens=tokens, lengths=lengths)
 
 
+def split_join_args(col_s, sim, tau):
+    """Support both ``(col, sim, tau)`` and ``(col_r, col_s, sim, tau)``.
+
+    Every join driver historically took ``sim`` as its second positional
+    argument; when the second argument is a similarity name instead of a
+    :class:`Collection`, the remaining positionals shift right and the call
+    is a self-join.
+    """
+    if isinstance(col_s, str):
+        if not isinstance(tau, (int, float)) or isinstance(tau, bool):
+            # A displaced object (e.g. a BitmapFilter passed positionally
+            # after (col, sim, tau)) would otherwise be dropped silently.
+            raise TypeError(
+                "extra positional argument after (col, sim, tau); pass "
+                "bitmap=/stats= by keyword")
+        if isinstance(sim, (int, float)) and not isinstance(sim, bool):
+            tau = float(sim)
+        sim = col_s
+        col_s = None
+    return col_s, sim, tau
+
+
+def _frequency_lut(flat: np.ndarray) -> dict:
+    """token -> rank by (frequency, token); deterministic relabelling."""
+    uniq, counts = np.unique(flat, return_counts=True)
+    order = np.lexsort((uniq, counts))
+    rank = np.empty(len(uniq), dtype=np.int64)
+    rank[order] = np.arange(len(uniq))
+    return dict(zip(uniq.tolist(), rank.tolist()))
+
+
+def _relabel_and_sort(col: Collection, lut: dict) -> Collection:
+    relabeled: List[List[int]] = []
+    for i in range(col.num_sets):
+        relabeled.append(sorted(lut[int(t)] for t in col.row(i)))
+    # Sort sets by (size, lexicographic token ids).
+    relabeled.sort(key=lambda r: (len(r), tuple(r)))
+    return from_lists(relabeled)
+
+
 def preprocess(col: Collection) -> Collection:
     """Paper Section 5 preprocessing.
 
@@ -80,25 +120,22 @@ def preprocess(col: Collection) -> Collection:
        most selective, and what the reference implementation of [13] does.
     2. Sort sets by size; ties broken lexicographically by token ids.
     """
-    flat = col.tokens[col.tokens != PAD_TOKEN]
-    uniq, counts = np.unique(flat, return_counts=True)
-    # Rank tokens by (frequency, token) so that relabelling is deterministic.
-    order = np.lexsort((uniq, counts))
-    rank = np.empty(len(uniq), dtype=np.int64)
-    rank[order] = np.arange(len(uniq))
-    lut = dict(zip(uniq.tolist(), rank.tolist()))
+    return _relabel_and_sort(col, _frequency_lut(col.tokens[col.tokens != PAD_TOKEN]))
 
-    relabeled: List[List[int]] = []
-    for i in range(col.num_sets):
-        row = sorted(lut[int(t)] for t in col.row(i))
-        relabeled.append(row)
 
-    # Sort sets by (size, lexicographic token ids).
-    def _key(r: List[int]):
-        return (len(r), tuple(r))
+def preprocess_rs(col_r: Collection, col_s: Collection) -> tuple[Collection, Collection]:
+    """Section 5 preprocessing for a two-collection R×S join.
 
-    relabeled.sort(key=_key)
-    return from_lists(relabeled)
+    Token frequencies are counted over the union of *both* collections so the
+    relabelled ids form one shared total order — prefix-filter correctness
+    and selectivity depend on R and S agreeing on it (relabelling each side
+    independently would map the same token to different ids).  Each collection
+    is then sorted by size as in :func:`preprocess`.
+    """
+    flat = np.concatenate([col_r.tokens[col_r.tokens != PAD_TOKEN],
+                           col_s.tokens[col_s.tokens != PAD_TOKEN]])
+    lut = _frequency_lut(flat)
+    return _relabel_and_sort(col_r, lut), _relabel_and_sort(col_s, lut)
 
 
 def pad_collection(col: Collection, num_sets: int, max_len: int | None = None) -> Collection:

@@ -15,9 +15,18 @@ improvement of +BF vs the original — the paper's actual claim — is, and is
 what ``benchmarks/bench_cpu_algos.py`` measures.  All four return exactly the
 oracle pair set (tested).
 
-Inputs must be preprocessed with :func:`repro.core.collection.preprocess`
-(tokens relabelled by ascending frequency, sets sorted by size) — both the
-prefix filter's selectivity and the sorted-index length early-out rely on it.
+Every algorithm supports both the self-join (``algo(col, sim, tau)``) and the
+paper's general two-collection R×S join (``algo(col_r, col_s, sim, tau)``):
+the prefix index is built over R and probed with S, and the bitmap filter
+(built with :meth:`BitmapFilter.build_rs` for R×S) runs at the same
+``filter_2``/``filter_3`` points.
+
+Self-join inputs must be preprocessed with
+:func:`repro.core.collection.preprocess`, R×S inputs with
+:func:`repro.core.collection.preprocess_rs` (a *shared* token-frequency
+ordering across both collections — prefix-filter correctness needs a common
+total order) — both the prefix filter's selectivity and the sorted-index
+length early-out rely on it.
 """
 
 from __future__ import annotations
@@ -29,7 +38,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import bounds, verify
-from repro.core.collection import Collection
+from repro.core.collection import Collection, split_join_args
 from repro.core.constants import JACCARD
 from repro.core.filters import BitmapFilter
 
@@ -66,14 +75,81 @@ def _verify_pair(col: Collection, r: int, s: int, sim: str, tau: float,
     return o >= need
 
 
+def _verify_pair_rs(col_r: Collection, col_s: Collection, r: int, s: int,
+                    sim: str, tau: float, stats: AlgoStats) -> bool:
+    stats.verified += 1
+    need = float(bounds.equivalent_overlap(
+        sim, tau, int(col_r.lengths[r]), int(col_s.lengths[s])))
+    o = verify.overlap_early_terminate(col_r.row(r), col_s.row(s), need)
+    return o >= need
+
+
+def _pack_pairs_rs(results: List[Tuple[int, int]]) -> np.ndarray:
+    """(r_index, s_index) pairs — no i<j canonicalisation across collections."""
+    if not results:
+        return np.zeros((0, 2), dtype=np.int64)
+    return np.asarray(sorted(set(results)), dtype=np.int64)
+
+
 # ---------------------------------------------------------------------------
 # AllPairs [3]: prefix filter (filter_1) + length filter (filter_2)
 # ---------------------------------------------------------------------------
 
-def allpairs(col: Collection, sim: str = JACCARD, tau: float = 0.8,
+def _rs_probe_candidates(index, col_r: Collection, col_s: Collection, s: int,
+                         sim: str, tau: float, positional: bool) -> set:
+    """Candidate R ids for probe set ``s`` (shared prefix token + length
+    window; optional positional filter at the first match)."""
+    ls = int(col_s.lengths[s])
+    p = int(bounds.prefix_length(sim, tau, ls))
+    lo, hi = bounds.length_bounds(sim, tau, ls)
+    seen: set[int] = set()
+    for pos in range(p):
+        for r, rpos in index[int(col_s.tokens[s, pos])]:
+            lr = int(col_r.lengths[r])
+            if lr > hi:
+                break  # index lists are length-sorted: later r only longer
+            if lr < lo:
+                continue
+            if r in seen:
+                continue
+            if positional:
+                ub = bounds.positional_upper_bound(lr, ls, rpos, pos)
+                need = bounds.equivalent_overlap(sim, tau, lr, ls)
+                if ub < need:
+                    continue
+            seen.add(r)
+    return seen
+
+
+def _allpairs_like_rs(col_r: Collection, col_s: Collection, sim: str,
+                      tau: float, bitmap: Optional[BitmapFilter],
+                      stats: AlgoStats, positional: bool) -> np.ndarray:
+    """Shared R×S driver for AllPairs (positional=False) / PPJoin (True)."""
+    index = _build_prefix_index(col_r, sim, tau)
+    results: List[Tuple[int, int]] = []
+    for s in range(col_s.num_sets):
+        seen = _rs_probe_candidates(index, col_r, col_s, s, sim, tau, positional)
+        cands = np.fromiter(seen, dtype=np.int64, count=len(seen))
+        stats.candidates += len(cands)
+        if bitmap is not None and len(cands):
+            pruned = bitmap.prune_mask(s, cands)  # filter_3 (probe side = S)
+            stats.bitmap_pruned += int(pruned.sum())
+            cands = cands[~pruned]
+        for r in cands:
+            if _verify_pair_rs(col_r, col_s, int(r), s, sim, tau, stats):
+                results.append((int(r), s))
+    stats.results = len(results)
+    return _pack_pairs_rs(results)
+
+
+def allpairs(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
              bitmap: Optional[BitmapFilter] = None,
              stats: Optional[AlgoStats] = None) -> np.ndarray:
+    col_s, sim, tau = split_join_args(col_s, sim, tau)
     stats = stats if stats is not None else AlgoStats()
+    if col_s is not None:
+        return _allpairs_like_rs(col, col_s, sim, tau, bitmap, stats,
+                                 positional=False)
     index = _build_prefix_index(col, sim, tau)
     lengths = col.lengths
     results: List[Tuple[int, int]] = []
@@ -106,10 +182,14 @@ def allpairs(col: Collection, sim: str = JACCARD, tau: float = 0.8,
 # PPJoin [25]: AllPairs + positional filter in candidate generation
 # ---------------------------------------------------------------------------
 
-def ppjoin(col: Collection, sim: str = JACCARD, tau: float = 0.8,
+def ppjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
            bitmap: Optional[BitmapFilter] = None,
            stats: Optional[AlgoStats] = None) -> np.ndarray:
+    col_s, sim, tau = split_join_args(col_s, sim, tau)
     stats = stats if stats is not None else AlgoStats()
+    if col_s is not None:
+        return _allpairs_like_rs(col, col_s, sim, tau, bitmap, stats,
+                                 positional=True)
     index = _build_prefix_index(col, sim, tau)
     lengths = col.lengths
     results: List[Tuple[int, int]] = []
@@ -150,18 +230,13 @@ def ppjoin(col: Collection, sim: str = JACCARD, tau: float = 0.8,
 # GroupJoin [4]: PPJoin filters over groups of identical (size, prefix)
 # ---------------------------------------------------------------------------
 
-def groupjoin(col: Collection, sim: str = JACCARD, tau: float = 0.8,
-              bitmap: Optional[BitmapFilter] = None,
-              stats: Optional[AlgoStats] = None) -> np.ndarray:
-    stats = stats if stats is not None else AlgoStats()
-    lengths = col.lengths
-    # Group sets sharing (size, prefix tokens). Filters run once per group
-    # representative; the verification stage expands groups to members.
+def _group_by_size_prefix(col: Collection, sim: str, tau: float):
+    """Group sets sharing (size, prefix tokens); returns (members, reps)."""
     group_of: Dict[Tuple, int] = {}
     members: List[List[int]] = []
     rep: List[int] = []
     for i in range(col.num_sets):
-        n = int(lengths[i])
+        n = int(col.lengths[i])
         p = int(bounds.prefix_length(sim, tau, n))
         key = (n, tuple(int(t) for t in col.tokens[i, :p]))
         g = group_of.get(key)
@@ -171,7 +246,69 @@ def groupjoin(col: Collection, sim: str = JACCARD, tau: float = 0.8,
             rep.append(i)
         else:
             members[g].append(i)
+    return members, rep
 
+
+def _groupjoin_rs(col_r: Collection, col_s: Collection, sim: str, tau: float,
+                  bitmap: Optional[BitmapFilter], stats: AlgoStats) -> np.ndarray:
+    """R×S GroupJoin: R grouped by (size, prefix), probed with each S set.
+
+    Filters run once per (probe, R-group); the bitmap filter applies to the
+    *expanded* member pairs (paper Section 4.1).  No within-group stage — those
+    pairs are R–R, which a two-collection join never reports.
+    """
+    members, rep = _group_by_size_prefix(col_r, sim, tau)
+    grows = [col_r.row(rep[g]) for g in range(len(members))]
+    glen = np.array([len(r) for r in grows], dtype=np.int64)
+
+    index: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
+    for g, row in enumerate(grows):
+        p = int(bounds.prefix_length(sim, tau, len(row)))
+        for pos in range(p):
+            index[int(row[pos])].append((g, pos))
+
+    results: List[Tuple[int, int]] = []
+    for s in range(col_s.num_sets):
+        ls = int(col_s.lengths[s])
+        p = int(bounds.prefix_length(sim, tau, ls))
+        lo, hi = bounds.length_bounds(sim, tau, ls)
+        seen: set[int] = set()
+        for pos in range(p):
+            for g, gpos in index[int(col_s.tokens[s, pos])]:
+                lg = int(glen[g])
+                if lg > hi:
+                    break  # groups are length-sorted like their members
+                if lg < lo or g in seen:
+                    continue
+                ub = bounds.positional_upper_bound(lg, ls, gpos, pos)
+                need = bounds.equivalent_overlap(sim, tau, lg, ls)
+                if ub < need:
+                    continue
+                seen.add(g)
+        for g in seen:
+            cands = np.asarray(members[g], dtype=np.int64)
+            stats.candidates += len(cands)
+            if bitmap is not None:
+                pruned = bitmap.prune_mask(s, cands)
+                stats.bitmap_pruned += int(pruned.sum())
+                cands = cands[~pruned]
+            for r in cands:
+                if _verify_pair_rs(col_r, col_s, int(r), s, sim, tau, stats):
+                    results.append((int(r), s))
+    stats.results = len(results)
+    return _pack_pairs_rs(results)
+
+
+def groupjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
+              bitmap: Optional[BitmapFilter] = None,
+              stats: Optional[AlgoStats] = None) -> np.ndarray:
+    col_s, sim, tau = split_join_args(col_s, sim, tau)
+    stats = stats if stats is not None else AlgoStats()
+    if col_s is not None:
+        return _groupjoin_rs(col, col_s, sim, tau, bitmap, stats)
+    # Group sets sharing (size, prefix tokens). Filters run once per group
+    # representative; the verification stage expands groups to members.
+    members, rep = _group_by_size_prefix(col, sim, tau)
     gcol_rows = [col.row(rep[g]) for g in range(len(members))]
     glen = np.array([len(r) for r in gcol_rows], dtype=np.int64)
 
@@ -239,7 +376,66 @@ def groupjoin(col: Collection, sim: str = JACCARD, tau: float = 0.8,
 # AdaptJoin [23]: variable-length prefix schema
 # ---------------------------------------------------------------------------
 
-def adaptjoin(col: Collection, sim: str = JACCARD, tau: float = 0.8,
+def _adapt_select_ell(match_count: Dict[int, int], probe_cost: int,
+                      max_ell: int, sim: str, tau: float, n: int):
+    """Adaptive ℓ selection: take the smallest ℓ whose candidate count stops
+    paying for another index pass (monotone counts make this the standard
+    [23] heuristic).  Returns (ell, candidate ids at that level).
+
+    The ℓ-prefix theorem guarantees ≥ ℓ shared prefix tokens only when the
+    required overlap itself is ≥ ℓ, so ℓ is capped at the probe's minimum
+    equivalent overlap (= n - prefix_length(n) + 1) — without the cap, small
+    sets with o_req < ℓ lose true pairs.
+    """
+    o_min = max(int(n - bounds.prefix_length(sim, tau, n) + 1), 1)
+    max_ell = min(max_ell, o_min)
+    cand_at = []
+    for l in range(1, max_ell + 1):
+        cand_at.append([s for s, c in match_count.items() if c >= l])
+    ell = 1
+    for l in range(1, max_ell):
+        saving = len(cand_at[l - 1]) - len(cand_at[l])
+        if saving > probe_cost:
+            ell = l + 1
+        else:
+            break
+    return ell, cand_at[ell - 1]
+
+
+def _adaptjoin_rs(col_r: Collection, col_s: Collection, sim: str, tau: float,
+                  bitmap: Optional[BitmapFilter], stats: AlgoStats,
+                  max_ell: int) -> np.ndarray:
+    """R×S AdaptJoin: the ℓ-prefix index over R, probed with every S set."""
+    index = _build_prefix_index(col_r, sim, tau, ell=max_ell)
+    results: List[Tuple[int, int]] = []
+    for s in range(col_s.num_sets):
+        ls = int(col_s.lengths[s])
+        lo, hi = bounds.length_bounds(sim, tau, ls)
+        match_count: Dict[int, int] = defaultdict(int)
+        plen = int(bounds.prefix_length_ell(sim, tau, ls, max_ell))
+        for pos in range(plen):
+            for r, _rpos in index[int(col_s.tokens[s, pos])]:
+                lr = int(col_r.lengths[r])
+                if lr > hi:
+                    break  # length-sorted index lists
+                if lr < lo:
+                    continue
+                match_count[r] += 1
+        ell, cand_ids = _adapt_select_ell(match_count, ls, max_ell, sim, tau, ls)
+        cands = np.asarray(sorted(cand_ids), dtype=np.int64)
+        stats.candidates += len(cands)
+        if bitmap is not None and len(cands) and ell == 1:
+            pruned = bitmap.prune_mask(s, cands)  # filter_2 @ 1-prefix pass
+            stats.bitmap_pruned += int(pruned.sum())
+            cands = cands[~pruned]
+        for r in cands:
+            if _verify_pair_rs(col_r, col_s, int(r), s, sim, tau, stats):
+                results.append((int(r), s))
+    stats.results = len(results)
+    return _pack_pairs_rs(results)
+
+
+def adaptjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
               bitmap: Optional[BitmapFilter] = None,
               stats: Optional[AlgoStats] = None,
               max_ell: int = 3) -> np.ndarray:
@@ -250,8 +446,13 @@ def adaptjoin(col: Collection, sim: str = JACCARD, tau: float = 0.8,
     index-probe cost — the simplified cost model of [23].  Candidates must
     share >= ℓ prefix tokens.  The Bitmap Filter runs at candidate generation
     (filter_2) during the ℓ=1 iteration, per paper Section 4.1.
+
+    R×S form: the ℓ-prefix index is built over R and probed with every S set.
     """
+    col_s, sim, tau = split_join_args(col_s, sim, tau)
     stats = stats if stats is not None else AlgoStats()
+    if col_s is not None:
+        return _adaptjoin_rs(col, col_s, sim, tau, bitmap, stats, max_ell)
     index = _build_prefix_index(col, sim, tau, ell=max_ell)
     lengths = col.lengths
     results: List[Tuple[int, int]] = []
@@ -273,21 +474,8 @@ def adaptjoin(col: Collection, sim: str = JACCARD, tau: float = 0.8,
                 # s's own prefix at level ℓ shrinks too; the index stores
                 # max_ell prefixes, so re-check the position lazily below.
                 match_count[s] += 1
-        # Adaptive ℓ selection: take the smallest ℓ whose candidate count
-        # stops paying for another index pass (monotone counts make this the
-        # standard [23] heuristic).
-        cand_at = []
-        for l in range(1, max_ell + 1):
-            cand_at.append([s for s, c in match_count.items() if c >= l])
-        ell = 1
-        probe_cost = lr  # one more index pass ~ O(prefix)
-        for l in range(1, max_ell):
-            saving = len(cand_at[l - 1]) - len(cand_at[l])
-            if saving > probe_cost:
-                ell = l + 1
-            else:
-                break
-        cands = np.asarray(sorted(cand_at[ell - 1]), dtype=np.int64)
+        ell, cand_ids = _adapt_select_ell(match_count, lr, max_ell, sim, tau, lr)
+        cands = np.asarray(sorted(cand_ids), dtype=np.int64)
         stats.candidates += len(cands)
         if bitmap is not None and len(cands) and ell == 1:
             pruned = bitmap.prune_mask(r, cands)  # filter_2 @ 1-prefix pass

@@ -41,18 +41,33 @@ class BitmapFilter:
 
     ``numpy`` flavour used by the faithful CPU algorithms; the device join in
     ``repro.core.join`` uses the Pallas kernels instead.
+
+    For a self-join the probe and the index are the same collection.  For an
+    R×S join build with :meth:`build_rs`: the index side holds R (the
+    candidates), the probe side holds S; ``prune_mask(s, r_cands)`` then
+    compares the probe set's bitmap against index-side bitmaps.  Both sides
+    must share one token space (``h(t) = t mod b`` is token-value based, so
+    bitmaps are comparable across collections).
     """
 
-    words: np.ndarray  # uint32[N, W] packed bitmaps
+    words: np.ndarray  # uint32[N, W] packed bitmaps (index side)
     lengths: np.ndarray  # int32[N]
     sim: str
     tau: float
     b: int
     cutoff: int
     method: str
+    probe_words: np.ndarray | None = None   # probe side; defaults to index side
+    probe_lengths: np.ndarray | None = None
 
     # 8-bit popcount LUT shared by all instances.
     _LUT = np.unpackbits(np.arange(256, dtype=np.uint8)[:, None], axis=1).sum(1).astype(np.int32)
+
+    def __post_init__(self):
+        if self.probe_words is None:
+            self.probe_words = self.words
+        if self.probe_lengths is None:
+            self.probe_lengths = self.lengths
 
     @classmethod
     def build(
@@ -86,22 +101,62 @@ class BitmapFilter:
             method=chosen,
         )
 
+    @classmethod
+    def build_rs(
+        cls,
+        tokens_r: np.ndarray,
+        lengths_r: np.ndarray,
+        tokens_s: np.ndarray,
+        lengths_s: np.ndarray,
+        sim: str,
+        tau: float,
+        b: int = 64,
+        method: str = BITMAP_COMBINED,
+        use_cutoff: bool = True,
+    ) -> "BitmapFilter":
+        """Cross-collection filter: index side R, probe side S."""
+        import jax.numpy as jnp
+
+        if method == BITMAP_COMBINED:
+            chosen = bm.choose_method(tau, b)
+        else:
+            chosen = method
+        words_r = np.asarray(bm.generate_bitmaps(
+            jnp.asarray(tokens_r), jnp.asarray(lengths_r), b, method=chosen))
+        words_s = np.asarray(bm.generate_bitmaps(
+            jnp.asarray(tokens_s), jnp.asarray(lengths_s), b, method=chosen))
+        cutoff = expected.cutoff_point(chosen, b, float(tau)) if use_cutoff else np.iinfo(np.int32).max
+        return cls(
+            words=words_r,
+            lengths=np.asarray(lengths_r),
+            sim=sim,
+            tau=tau,
+            b=b,
+            cutoff=int(cutoff),
+            method=chosen,
+            probe_words=words_s,
+            probe_lengths=np.asarray(lengths_s),
+        )
+
     def hamming(self, i: int, js: np.ndarray) -> np.ndarray:
-        """Hamming distances between set ``i`` and sets ``js``."""
-        x = self.words[i][None, :] ^ self.words[js]
+        """Hamming distances between probe set ``i`` and index sets ``js``."""
+        x = self.probe_words[i][None, :] ^ self.words[js]
         return self._LUT[x.view(np.uint8)].reshape(len(js), -1).sum(axis=1)
 
     def prune_mask(self, i: int, js: np.ndarray) -> np.ndarray:
         """True where the pair (i, j) is *pruned* by the bitmap filter.
 
-        Mirrors Algorithm 7: above the cutoff the filter is a no-op.
+        ``i`` indexes the probe side, ``js`` the index side (identical for a
+        self-join).  Mirrors Algorithm 7: above the cutoff the filter is a
+        no-op.
         """
         js = np.asarray(js, dtype=np.int64)
         if len(js) == 0:
             return np.zeros((0,), dtype=bool)
-        if self.lengths[i] > self.cutoff:
+        if self.probe_lengths[i] > self.cutoff:
             return np.zeros(js.shape, dtype=bool)
         ham = self.hamming(i, js)
-        ub = bounds.overlap_upper_bound(self.lengths[i], self.lengths[js], ham)
-        need = bounds.equivalent_overlap(self.sim, self.tau, self.lengths[i], self.lengths[js])
+        ub = bounds.overlap_upper_bound(self.probe_lengths[i], self.lengths[js], ham)
+        need = bounds.equivalent_overlap(self.sim, self.tau,
+                                         self.probe_lengths[i], self.lengths[js])
         return ub < need

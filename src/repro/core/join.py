@@ -13,6 +13,13 @@ Three tiers, mirroring the paper's structure:
   step runs the same fused filter + verification locally. Used by the
   dedup pipeline and by the dry-run.
 
+Every driver supports both the paper's general two-collection R×S join and
+the optimized self-join special case.  Self-join is selected by omitting the
+second collection: ``naive_join(col, sim, tau)`` (the seed calling convention
+still works positionally); R×S by passing it: ``naive_join(col_r, col_s, sim,
+tau)``.  Self-joins return pairs ``(i, j)`` with ``i < j``; R×S joins return
+``(r_index, s_index)`` pairs over the two collections' original indices.
+
 All joins return *exactly* the same pair set as the oracle (property-tested);
 the bitmap filter only ever removes pairs that verification would reject.
 """
@@ -30,7 +37,7 @@ import numpy as np
 
 from repro.core import bitmap as bm
 from repro.core import bounds, expected, verify
-from repro.core.collection import Collection
+from repro.core.collection import Collection, split_join_args
 from repro.core.constants import BITMAP_COMBINED, JACCARD
 from repro.kernels import ops as kops
 
@@ -39,31 +46,43 @@ from repro.kernels import ops as kops
 # Oracle
 # ---------------------------------------------------------------------------
 
-def naive_join(col: Collection, sim: str, tau: float) -> np.ndarray:
-    """Algorithm 1 (self-join): all verified pairs as int64[K, 2] (i < j)."""
-    tokens = jnp.asarray(col.tokens)
-    lengths = jnp.asarray(col.lengths)
-    n = col.num_sets
-    o = _overlap_matrix(tokens)
-    need = bounds.equivalent_overlap(sim, tau, np.asarray(lengths)[:, None],
-                                     np.asarray(lengths)[None, :])
+_normalize_rs_args = split_join_args
+
+
+def naive_join(col_r: Collection, col_s: Collection | str | None = None,
+               sim: str = JACCARD, tau: float = 0.8) -> np.ndarray:
+    """Algorithm 1: all verified pairs as int64[K, 2].
+
+    Self-join (``col_s`` omitted) returns pairs with i < j; R×S returns
+    (r_index, s_index) over the full cross product.
+    """
+    col_s, sim, tau = _normalize_rs_args(col_s, sim, tau)
+    self_join = col_s is None
+    if self_join:
+        col_s = col_r
+    o = _overlap_matrix(jnp.asarray(col_r.tokens), jnp.asarray(col_s.tokens))
+    len_r = np.asarray(col_r.lengths)
+    len_s = np.asarray(col_s.lengths)
+    need = bounds.equivalent_overlap(sim, tau, len_r[:, None], len_s[None, :])
     simmat = np.asarray(o) >= need
     # Empty sets (padding) are never similar to anything — the vacuous
     # 0 >= 0 case for normalised similarities is excluded, matching the
     # paper's definition over non-empty sets.
-    nz = np.asarray(lengths) > 0
-    simmat &= nz[:, None] & nz[None, :]
-    iu = np.triu_indices(n, k=1)
-    mask = simmat[iu]
-    return np.stack([iu[0][mask], iu[1][mask]], axis=1).astype(np.int64)
+    simmat &= (len_r > 0)[:, None] & (len_s > 0)[None, :]
+    if self_join:
+        iu = np.triu_indices(col_r.num_sets, k=1)
+        mask = simmat[iu]
+        return np.stack([iu[0][mask], iu[1][mask]], axis=1).astype(np.int64)
+    ii, jj = np.nonzero(simmat)
+    return np.stack([ii, jj], axis=1).astype(np.int64)
 
 
 @jax.jit
-def _overlap_matrix(tokens: jnp.ndarray) -> jnp.ndarray:
+def _overlap_matrix(tokens_r: jnp.ndarray, tokens_s: jnp.ndarray) -> jnp.ndarray:
     def row_vs_all(row):
-        return jax.vmap(lambda s: verify._row_overlap(row, s))(tokens)
+        return jax.vmap(lambda s: verify._row_overlap(row, s))(tokens_s)
 
-    return jax.vmap(row_vs_all)(tokens)
+    return jax.vmap(row_vs_all)(tokens_r)
 
 
 # ---------------------------------------------------------------------------
@@ -101,7 +120,8 @@ def _length_sorted(col: Collection) -> tuple[Collection, np.ndarray]:
 
 
 def blocked_bitmap_join(
-    col: Collection,
+    col_r: Collection,
+    col_s: Collection | str | None = None,
     sim: str = JACCARD,
     tau: float = 0.8,
     *,
@@ -113,77 +133,112 @@ def blocked_bitmap_join(
     use_bitmap: bool = True,
     return_stats: bool = False,
 ):
-    """Exact self-join; returns int64[K, 2] pairs in original indices.
+    """Exact join; returns int64[K, 2] pairs in original indices.
 
-    The driver walks upper-triangular block pairs of the length-sorted
-    collection. Because blocks are length-contiguous, the Table 2 length
-    window prunes whole block pairs (the TPU analogue of the paper's sorted
+    The driver walks block pairs of the length-sorted collections — the full
+    R×S grid for two collections, the upper triangle for a self-join. Because
+    blocks are length-contiguous, the Table 2 length window prunes whole block
+    pairs in both directions (the TPU analogue of the paper's sorted
     inverted-list early termination). Surviving tiles run the fused bitmap
-    kernel; candidates are compacted on host and exactly verified on device.
+    kernel; bitmap candidates are intersected with the per-pair length-window
+    mask (so ``JoinStats.candidates <= total_pairs`` always), compacted on
+    host and exactly verified on device.
     """
-    scol, order = _length_sorted(col)
-    n = scol.num_sets
-    tokens = jnp.asarray(scol.tokens)
-    lengths = jnp.asarray(scol.lengths)
+    col_s, sim, tau = _normalize_rs_args(col_s, sim, tau)
+    self_join = col_s is None
+    scol_r, order_r = _length_sorted(col_r)
+    if self_join:
+        scol_s, order_s = scol_r, order_r
+    else:
+        scol_s, order_s = _length_sorted(col_s)
+    nr, ns = scol_r.num_sets, scol_s.num_sets
+    tokens_r = jnp.asarray(scol_r.tokens)
+    lengths_r = jnp.asarray(scol_r.lengths)
+    tokens_s = jnp.asarray(scol_s.tokens)
+    lengths_s = jnp.asarray(scol_s.lengths)
 
     if method == BITMAP_COMBINED:
         chosen = bm.choose_method(tau, b)
     else:
         chosen = method
     cutoff = expected.cutoff_point(chosen, b, float(tau)) if use_cutoff else 1 << 30
-    words = bm.generate_bitmaps(tokens, lengths, b, method=chosen)
+    words_r = bm.generate_bitmaps(tokens_r, lengths_r, b, method=chosen)
+    words_s = words_r if self_join else bm.generate_bitmaps(
+        tokens_s, lengths_s, b, method=chosen)
 
-    np_len = np.asarray(scol.lengths)
+    np_len_r = np.asarray(scol_r.lengths)
+    np_len_s = np.asarray(scol_s.lengths)
     stats = JoinStats()
     pairs_out: list[np.ndarray] = []
-    nb = math.ceil(n / block)
+    nb_r = math.ceil(nr / block)
+    nb_s = math.ceil(ns / block)
 
-    for bi in range(nb):
-        r0, r1 = bi * block, min((bi + 1) * block, n)
-        max_lr = int(np_len[r1 - 1]) if r1 > r0 else 0
-        _, hi = bounds.length_bounds(sim, tau, max(int(np_len[r0]), 1))
-        for bj in range(bi, nb):
-            s0, s1 = bj * block, min((bj + 1) * block, n)
+    for bi in range(nb_r):
+        r0, r1 = bi * block, min((bi + 1) * block, nr)
+        min_lr = int(np_len_r[r0])
+        max_lr = int(np_len_r[r1 - 1])
+        # Admissible |s| window for the whole R block: the length bounds are
+        # nondecreasing in |r|, so the block-wide window is
+        # [lo(min |r|), hi(max |r|)].
+        lo_r0, _ = bounds.length_bounds(sim, tau, max(min_lr, 1))
+        _, hi_r1 = bounds.length_bounds(sim, tau, max(max_lr, 1))
+        for bj in range(bi if self_join else 0, nb_s):
+            s0, s1 = bj * block, min((bj + 1) * block, ns)
             stats.blocks_total += 1
-            min_ls = int(np_len[s0])
-            # Block-level length filter: smallest |s| in block j vs the
-            # largest admissible |s| for the *largest* r in block i — blocks
-            # are length-sorted, so if this fails every later bj fails too.
-            _, hi_r1 = bounds.length_bounds(sim, tau, max(max_lr, 1))
+            min_ls = int(np_len_s[s0])
+            max_ls = int(np_len_s[s1 - 1])
+            # Blocks are length-sorted: if the smallest |s| already exceeds
+            # the window every later bj fails too (terminate the row) ...
             if min_ls > hi_r1:
-                stats.blocks_skipped += nb - bj
+                stats.blocks_total += nb_s - bj - 1
+                stats.blocks_skipped += nb_s - bj
                 break
-            in_window = _window_pair_count(
-                np_len[r0:r1], np_len[s0:s1], sim, tau, bi == bj)
-            stats.total_pairs += int(in_window)
+            # ... and if the largest |s| is still below it, only this bj
+            # fails (later blocks hold longer sets).
+            if max_ls < lo_r0:
+                stats.blocks_skipped += 1
+                continue
+            win = _window_pair_mask(np_len_r[r0:r1], np_len_s[s0:s1], sim, tau)
+            if self_join and bi == bj:
+                win = np.triu(win, k=1)
+            stats.total_pairs += int(win.sum())
             if use_bitmap:
                 cand = kops.candidate_matrix(
-                    words[r0:r1], words[s0:s1],
-                    lengths[r0:r1], lengths[s0:s1],
+                    words_r[r0:r1], words_s[s0:s1],
+                    lengths_r[r0:r1], lengths_s[s0:s1],
                     sim=sim, tau=float(tau), self_join=False,
                     cutoff=int(cutoff), impl=impl)
-                cand = np.asarray(cand)
+                # The fused kernel does not apply the length filter; without
+                # this intersection `candidates` could exceed `total_pairs`
+                # and filter_ratio could go negative.
+                cand = np.asarray(cand) & win
             else:
-                cand = _window_pair_mask(np_len[r0:r1], np_len[s0:s1], sim, tau)
-            if bi == bj:
-                cand = np.triu(cand, k=1)
+                cand = win
             ii, jj = np.nonzero(cand)
             if len(ii) == 0:
                 continue
             stats.candidates += len(ii)
             gi = jnp.asarray(ii + r0)
             gj = jnp.asarray(jj + s0)
-            ok = np.asarray(verify.verify_pairs(tokens, lengths, gi, gj, sim, float(tau)))
+            if self_join:
+                ok = np.asarray(verify.verify_pairs(
+                    tokens_r, lengths_r, gi, gj, sim, float(tau)))
+            else:
+                ok = np.asarray(verify.verify_pairs_rs(
+                    tokens_r, lengths_r, tokens_s, lengths_s, gi, gj,
+                    sim, float(tau)))
             if ok.any():
                 stats.verified_true += int(ok.sum())
                 pairs_out.append(
-                    np.stack([order[np.asarray(gi)[ok]], order[np.asarray(gj)[ok]]], axis=1))
+                    np.stack([order_r[np.asarray(gi)[ok]],
+                              order_s[np.asarray(gj)[ok]]], axis=1))
 
     if pairs_out:
         pairs = np.concatenate(pairs_out, axis=0)
-        lo = np.minimum(pairs[:, 0], pairs[:, 1])
-        hi_ = np.maximum(pairs[:, 0], pairs[:, 1])
-        pairs = np.stack([lo, hi_], axis=1)
+        if self_join:
+            lo = np.minimum(pairs[:, 0], pairs[:, 1])
+            hi_ = np.maximum(pairs[:, 0], pairs[:, 1])
+            pairs = np.stack([lo, hi_], axis=1)
         pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
     else:
         pairs = np.zeros((0, 2), dtype=np.int64)
@@ -199,13 +254,6 @@ def _window_pair_mask(len_r: np.ndarray, len_s: np.ndarray, sim: str, tau: float
     return mask
 
 
-def _window_pair_count(len_r, len_s, sim, tau, diagonal: bool) -> int:
-    mask = _window_pair_mask(len_r, len_s, sim, tau)
-    if diagonal:
-        mask = np.triu(mask, k=1)
-    return int(mask.sum())
-
-
 # ---------------------------------------------------------------------------
 # Distributed ring join (shard_map + collective_permute)
 # ---------------------------------------------------------------------------
@@ -219,58 +267,77 @@ def ring_join_sharded(
     axis: str | tuple[str, ...],
     sim: str,
     tau: float,
+    tokens_s: jnp.ndarray | None = None,
+    lengths_s: jnp.ndarray | None = None,
+    words_s: jnp.ndarray | None = None,
     cutoff: int = 1 << 30,
     impl: str = "ref",
     capacity_per_step: int | None = None,
 ):
-    """Distributed exact self-join via a ring sweep.
+    """Distributed exact join via a ring sweep.
 
-    R is sharded over ``axis``; every ring step rotates the S shard (bitmaps +
-    tokens + lengths) one hop with ``collective_permute`` while the local
-    shard runs the fused bitmap filter + exact verification against the block
-    it currently holds.  After ``n_dev`` steps every pair (i < j) has been
-    examined exactly once.  The permuted operands of step k+1 are independent
-    of step k's math, so XLA's latency-hiding scheduler can overlap the
-    ICI transfer with the tile compute.
+    R is sharded over ``axis`` and stays fixed per device; every ring step
+    rotates the S shard (bitmaps + tokens + lengths) one hop with
+    ``collective_permute`` while the local R shard runs the fused bitmap
+    filter + exact verification against the S block it currently holds.
+    After ``n_dev`` steps every pair has been examined exactly once — the
+    upper triangle (i < j) for a self-join (S operands omitted), the full
+    R×S grid when ``tokens_s``/``lengths_s``/``words_s`` are given.  The
+    permuted operands of step k+1 are independent of step k's math, so XLA's
+    latency-hiding scheduler can overlap the ICI transfer with tile compute.
 
     Candidates are compacted into a fixed ``capacity_per_step`` buffer per
-    device — the TPU analogue of Algorithm 8's 2048-entry thread-local lists;
-    on overflow (counted and returned) the caller re-runs the affected step
-    densely, preserving exactness.
+    device — the TPU analogue of Algorithm 8's 2048-entry thread-local lists.
+    An overflowing step silently truncates its candidate list (``jnp.nonzero``
+    drops everything beyond ``cap``), so it is flagged *per step*: the caller
+    re-runs exactly the flagged (device, step) tiles densely, preserving
+    exactness.
 
-    Returns ``(pairs, valid, counters)``:
+    Returns ``(pairs, valid, counters, overflow_steps)``:
       pairs: int32[n_dev * steps * cap, 2] global (i, j) ids (garbage where
         ``valid`` is False), sharded over ``axis``.
       valid: bool with matching leading dim — verified-similar slots.
       counters: int64[n_dev, 3] per-device (candidates, verified, overflow).
+      overflow_steps: bool[n_dev, n_dev] — [device, step] tiles whose
+        candidate count exceeded ``cap`` (their pairs are incomplete).
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
+    rs_join = tokens_s is not None
+    if rs_join and (lengths_s is None or words_s is None):
+        raise ValueError("R×S ring join needs tokens_s, lengths_s and words_s")
+    if not rs_join:
+        tokens_s, lengths_s, words_s = tokens, lengths, words
+
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     axis_name = axes if len(axes) > 1 else axes[0]
     n_dev = int(np.prod([mesh.shape[a] for a in axes]))
-    n = tokens.shape[0]
-    if n % n_dev:
-        raise ValueError(f"collection size {n} must divide over {n_dev} devices (pad first)")
-    shard_n = n // n_dev
-    cap = capacity_per_step or max(8 * shard_n, 128)
+    n_r = tokens.shape[0]
+    n_s = tokens_s.shape[0]
+    if n_r % n_dev or n_s % n_dev:
+        raise ValueError(
+            f"collection sizes {n_r}x{n_s} must divide over {n_dev} devices (pad first)")
+    shard_r = n_r // n_dev
+    shard_s = n_s // n_dev
+    cap = capacity_per_step or max(8 * max(shard_r, shard_s), 128)
 
     spec = P(axes)
 
-    def local(tok, length, word):
+    def local(tok, length, word, s_tok0, s_len0, s_word0):
         my = jax.lax.axis_index(axis_name)
-        gi = my * shard_n + jnp.arange(shard_n, dtype=jnp.int32)
+        gi = my * shard_r + jnp.arange(shard_r, dtype=jnp.int32)
 
         def step(carry, t):
             (s_tok, s_len, s_word), (cand_acc, ver_acc, ovf_acc) = carry
             s_dev = (my - t) % n_dev  # origin device of the S shard we hold
-            gj = s_dev * shard_n + jnp.arange(shard_n, dtype=jnp.int32)
+            gj = s_dev * shard_s + jnp.arange(shard_s, dtype=jnp.int32)
             cand = kops.candidate_matrix(
                 word, s_word, length, s_len,
                 sim=sim, tau=float(tau), self_join=False,
                 cutoff=int(cutoff), impl=impl)
-            cand &= gi[:, None] < gj[None, :]
+            if not rs_join:
+                cand &= gi[:, None] < gj[None, :]
             n_cand = jnp.sum(cand, dtype=jnp.int32)
             # Fixed-capacity compaction (Algorithm 8's local candidate list).
             ii, jj = jnp.nonzero(cand, size=cap, fill_value=0)
@@ -278,31 +345,32 @@ def ring_join_sharded(
             ok = verify.pairwise_overlap(tok[ii], s_tok[jj])
             need = _need(sim, tau, length[ii], s_len[jj])
             ok_mask = slot_valid & (ok >= need)
-            out_pairs = jnp.stack([ii + my * shard_n,
-                                   jj + s_dev * shard_n], axis=1).astype(jnp.int32)
+            out_pairs = jnp.stack([ii + my * shard_r,
+                                   jj + s_dev * shard_s], axis=1).astype(jnp.int32)
             perm = [(d, (d + 1) % n_dev) for d in range(n_dev)]
             nxt = tuple(jax.lax.ppermute(x, axis_name, perm)
                         for x in (s_tok, s_len, s_word))
+            overflowed = n_cand > cap
             accs = (cand_acc + n_cand.astype(jnp.int64),
                     ver_acc + jnp.sum(ok_mask, dtype=jnp.int64),
-                    ovf_acc + (n_cand > cap).astype(jnp.int64))
-            return (nxt, accs), (out_pairs, ok_mask)
+                    ovf_acc + overflowed.astype(jnp.int64))
+            return (nxt, accs), (out_pairs, ok_mask, overflowed)
 
         zero = jnp.int64(0)
-        init = ((tok, length, word), (zero, zero, zero))
-        (_, (cand, ver, ovf)), (pairs, valid) = jax.lax.scan(
+        init = ((s_tok0, s_len0, s_word0), (zero, zero, zero))
+        (_, (cand, ver, ovf)), (pairs, valid, overflow) = jax.lax.scan(
             step, init, jnp.arange(n_dev, dtype=jnp.int32))
         counters = jnp.stack([cand, ver, ovf])[None]  # (1, 3) per device
-        return pairs.reshape(-1, 2), valid.reshape(-1), counters
+        return pairs.reshape(-1, 2), valid.reshape(-1), counters, overflow[None]
 
     fn = shard_map(
         local,
         mesh=mesh,
-        in_specs=(spec, spec, spec),
-        out_specs=(P(axes), P(axes), P(axes)),
+        in_specs=(spec,) * 6,
+        out_specs=(P(axes),) * 4,
         check_rep=False,
     )
-    return fn(tokens, lengths, words)
+    return fn(tokens, lengths, words, tokens_s, lengths_s, words_s)
 
 
 def _need(sim: str, tau: float, lr, ls):

@@ -83,3 +83,58 @@ def dedup_documents(texts: Sequence[str], tau: float = 0.8,
     col = from_lists([shingle(t, width) for t in texts])
     res = dedup_collection(col, tau, **kw)
     return [texts[i] for i in res.keep], res
+
+
+# ---------------------------------------------------------------------------
+# Incremental (R×S) dedup: new shard vs existing corpus
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IncrementalDedupResult:
+    keep: np.ndarray             # indices of ``new`` retained
+    drop_vs_corpus: np.ndarray   # indices of ``new`` similar to a corpus doc
+    drop_within: np.ndarray      # indices of ``new`` dropped as internal dups
+    pairs_rs: np.ndarray         # (corpus_index, new_index) similar pairs
+    stats_rs: JoinStats
+
+
+def dedup_against(corpus: Collection, new: Collection, tau: float = 0.8, *,
+                  b: int = 128, block: int = 4096, impl: str = "auto",
+                  within: bool = True) -> IncrementalDedupResult:
+    """Dedup a new shard against an already-deduped corpus (R×S join).
+
+    Any set in ``new`` at Jaccard >= tau to a corpus set is dropped (the
+    corpus copy wins); survivors are then optionally self-deduped.  Both
+    collections must live in one token space (same shingler / tokenizer run).
+    """
+    pairs_rs, stats_rs = blocked_bitmap_join(
+        corpus, new, JACCARD, tau, b=b, block=block, impl=impl,
+        return_stats=True)
+    dup_vs_corpus = (np.unique(pairs_rs[:, 1]) if len(pairs_rs)
+                     else np.zeros((0,), dtype=np.int64))
+    mask = np.ones(new.num_sets, dtype=bool)
+    mask[dup_vs_corpus] = False
+    survivors = np.nonzero(mask)[0]
+    drop_within = np.zeros((0,), dtype=np.int64)
+    keep = survivors
+    if within and len(survivors):
+        sub = Collection(tokens=new.tokens[survivors],
+                         lengths=new.lengths[survivors])
+        res = dedup_collection(sub, tau, b=b, block=block, impl=impl)
+        keep = survivors[res.keep]
+        drop_within = survivors[res.drop]
+    return IncrementalDedupResult(
+        keep=keep, drop_vs_corpus=dup_vs_corpus, drop_within=drop_within,
+        pairs_rs=pairs_rs, stats_rs=stats_rs)
+
+
+def dedup_documents_against(corpus_texts: Sequence[str],
+                            new_texts: Sequence[str], tau: float = 0.8,
+                            width: int = 5,
+                            **kw) -> Tuple[List[str], IncrementalDedupResult]:
+    """Document flavour of :func:`dedup_against` (shared shingle space —
+    both sides are shingled in this call, so hashes are comparable)."""
+    corpus = from_lists([shingle(t, width) for t in corpus_texts])
+    new = from_lists([shingle(t, width) for t in new_texts])
+    res = dedup_against(corpus, new, tau, **kw)
+    return [new_texts[i] for i in res.keep], res

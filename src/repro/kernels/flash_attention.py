@@ -47,10 +47,16 @@ def _make_kernel(sq: int, sk: int, q_chunk: int, kv_chunk: int, causal: bool,
 
         def body(kj, acc):
             o, m, l = acc
-            k_blk = pl.load(k_ref, (0, pl.dslice(kj * kv_chunk, kv_chunk),
-                                    0, slice(None))).astype(jnp.float32)
-            v_blk = pl.load(v_ref, (0, pl.dslice(kj * kv_chunk, kv_chunk),
-                                    0, slice(None)))
+            # Indices must all be slices: a bare python int trips the
+            # interpret-mode discharge rule in this JAX version.
+            k_blk = pl.load(k_ref, (pl.dslice(0, 1),
+                                    pl.dslice(kj * kv_chunk, kv_chunk),
+                                    pl.dslice(0, 1),
+                                    slice(None)))[0, :, 0, :].astype(jnp.float32)
+            v_blk = pl.load(v_ref, (pl.dslice(0, 1),
+                                    pl.dslice(kj * kv_chunk, kv_chunk),
+                                    pl.dslice(0, 1),
+                                    slice(None)))[0, :, 0, :]
             s = jax.lax.dot_general(
                 q, k_blk, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32) * scale     # (Cq, Ck)

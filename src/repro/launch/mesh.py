@@ -14,18 +14,24 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types`` only where the installed JAX has it (added post-0.4)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh helper (tests use small fake-device meshes)."""
     return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        tuple(shape), tuple(axes), **_axis_type_kwargs(len(axes)))
 
 
 def batch_axes(mesh) -> tuple:

@@ -1,0 +1,90 @@
+"""Seeded-random stand-in for ``hypothesis`` when it is not installed.
+
+Implements just the surface the property tests use — ``given``, ``settings``
+and the ``integers`` / ``floats`` / ``sampled_from`` / ``lists`` strategies
+(plus ``.filter``) — by drawing ``max_examples`` samples from a deterministic
+per-test ``numpy`` generator.  No shrinking, no example database: failures
+print the sampled arguments so they can be replayed by hand.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+from typing import Any, Callable, Dict
+
+
+class _Strategy:
+    def __init__(self, sample: Callable):
+        self._sample = sample
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "_Strategy":
+        def sample(rng):
+            for _ in range(10_000):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate rejected 10k samples")
+
+        return _Strategy(sample)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        return _Strategy(
+            lambda rng: [elements.sample(rng)
+                         for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+
+def given(**named: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            import numpy as np
+
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                sampled: Dict[str, Any] = {k: s.sample(rng) for k, s in named.items()}
+                try:
+                    fn(*args, **sampled, **kw)
+                except Exception:
+                    print(f"\n{fn.__name__} failed with sampled args: {sampled!r}")
+                    raise
+
+        wrapper._max_examples = 20
+        # pytest resolves undeclared parameters as fixtures: hide the sampled
+        # ones from the collected signature (hypothesis does the same).
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items() if name not in named]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco

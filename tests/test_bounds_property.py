@@ -6,7 +6,11 @@ bound must dominate the true overlap (no false negatives, ever)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container has no pip index — seeded fallback
+    from _propstrat import given, settings, strategies as st
 
 from repro.core import bitmap as bm
 from repro.core import bounds

@@ -3,7 +3,11 @@ similarity functions, thresholds, bitmap methods and block sizes."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container has no pip index — seeded fallback
+    from _propstrat import given, settings, strategies as st
 
 from repro.core import join
 from repro.core.collection import from_lists, preprocess

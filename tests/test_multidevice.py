@@ -13,6 +13,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess-heavy; deselect with -m "not slow"
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -76,7 +78,7 @@ col = pad_collection(col, ((col.num_sets + n_dev - 1)//n_dev)*n_dev)
 mesh = make_mesh((4,), ("data",))
 tokens = jnp.asarray(col.tokens); lengths = jnp.asarray(col.lengths)
 words = bm.generate_bitmaps(tokens, lengths, 64, method="xor")
-pairs, valid, counters = join.ring_join_sharded(
+pairs, valid, counters, overflow = join.ring_join_sharded(
     tokens, lengths, words, mesh=mesh, axis="data", sim="jaccard", tau=0.8)
 pairs = np.asarray(pairs)[np.asarray(valid)]
 got = np.unique(np.sort(pairs, axis=1), axis=0)
@@ -85,7 +87,71 @@ assert len(oracle) > 0
 assert np.array_equal(np.sort(got.ravel()), np.sort(oracle.ravel())), (got, oracle)
 c = np.asarray(counters)
 assert c[:, 2].sum() == 0  # no capacity overflow
+assert not np.asarray(overflow).any()
 print("RING JOIN OK", len(oracle), "pairs")
+"""))
+
+
+def test_ring_join_rs_matches_oracle():
+    print(_run(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import bitmap as bm, join
+from repro.core.collection import from_lists
+from repro.launch.mesh import make_mesh
+
+rng = np.random.default_rng(7)
+sets_r = [rng.choice(60, size=rng.integers(2, 12), replace=False).tolist() for _ in range(32)]
+sets_s = [rng.choice(60, size=rng.integers(2, 12), replace=False).tolist() for _ in range(24)]
+for k in range(4):
+    sets_s[k] = sets_r[3 * k]
+L = 12
+col_r = from_lists(sets_r, pad_to=L); col_s = from_lists(sets_s, pad_to=L)
+mesh = make_mesh((4,), ("data",))
+tr, lr = jnp.asarray(col_r.tokens), jnp.asarray(col_r.lengths)
+ts, ls = jnp.asarray(col_s.tokens), jnp.asarray(col_s.lengths)
+wr = bm.generate_bitmaps(tr, lr, 64, method="xor")
+ws = bm.generate_bitmaps(ts, ls, 64, method="xor")
+pairs, valid, counters, overflow = join.ring_join_sharded(
+    tr, lr, wr, tokens_s=ts, lengths_s=ls, words_s=ws,
+    mesh=mesh, axis="data", sim="jaccard", tau=0.6)
+got = np.unique(np.asarray(pairs)[np.asarray(valid)], axis=0)
+oracle = join.naive_join(col_r, col_s, "jaccard", 0.6)
+assert len(oracle) >= 4
+assert np.array_equal(got, oracle), (got, oracle)
+assert not np.asarray(overflow).any()
+print("RING RS JOIN OK", len(oracle), "pairs")
+"""))
+
+
+def test_ring_join_overflow_flagged_per_step():
+    """A step whose candidate count exceeds the capacity must trip both the
+    per-device overflow counter and the per-step flag (its pairs are
+    incomplete — the caller re-runs flagged steps densely)."""
+    print(_run(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import bitmap as bm, join
+from repro.core.collection import from_lists
+from repro.launch.mesh import make_mesh
+
+# 16 identical sets: every pair is a candidate, so capacity 1 overflows.
+sets = [[1, 2, 3, 4, 5]] * 16
+col = from_lists(sets)
+mesh = make_mesh((4,), ("data",))
+tok, length = jnp.asarray(col.tokens), jnp.asarray(col.lengths)
+words = bm.generate_bitmaps(tok, length, 64, method="xor")
+pairs, valid, counters, overflow = join.ring_join_sharded(
+    tok, length, words, mesh=mesh, axis="data", sim="jaccard", tau=0.8,
+    capacity_per_step=1)
+c = np.asarray(counters)
+of = np.asarray(overflow)
+assert c[:, 0].sum() == 16 * 15 // 2  # all pairs are candidates
+assert c[:, 2].sum() > 0              # aggregate counter trips
+assert of.any()                       # ...and the per-step flags locate them
+assert of.sum() == c[:, 2].sum()      # flags and counter agree
+# flagged (device, step) tiles are exactly those with n_cand > cap, so the
+# un-flagged steps' output is complete: with cap=1, valid slots <= 1/step.
+assert np.asarray(valid).reshape(4, 4, 1).sum(-1).max() <= 1
+print("OVERFLOW FLAGGED OK", int(of.sum()), "steps")
 """))
 
 

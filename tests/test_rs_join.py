@@ -1,0 +1,147 @@
+"""R×S two-collection joins: the blocked device join and all four CPU
+algorithms must return exactly the naive-oracle pair set, across every
+similarity function and threshold, with sane stats (filter_ratio ∈ [0, 1])."""
+
+import numpy as np
+import pytest
+
+from repro.core import cpu_algos, join
+from repro.core.collection import from_lists, preprocess_rs
+from repro.core.filters import BitmapFilter
+
+ALGOS = list(cpu_algos.ALGORITHMS)
+
+# The acceptance grid: every similarity × τ ∈ {0.5, 0.8, 0.95} (overlap takes
+# an absolute threshold instead of a ratio).
+GRID = ([(s, t) for s in ("jaccard", "cosine", "dice") for t in (0.5, 0.8, 0.95)]
+        + [("overlap", 3.0), ("overlap", 6.0)])
+
+
+def _rs_collections(seed, n_r=60, n_s=45, universe=90, max_len=14, plant=4):
+    rng = np.random.default_rng(seed)
+    sets_r = [rng.choice(universe, size=rng.integers(1, max_len),
+                         replace=False).tolist() for _ in range(n_r)]
+    sets_s = [rng.choice(universe, size=rng.integers(1, max_len),
+                         replace=False).tolist() for _ in range(n_s)]
+    for k in range(plant):  # cross-collection duplicates -> non-empty joins
+        sets_s[k] = sets_r[2 * k]
+    return preprocess_rs(from_lists(sets_r), from_lists(sets_s))
+
+
+@pytest.fixture(scope="module")
+def rs_pair():
+    return _rs_collections(seed=101)
+
+
+@pytest.mark.parametrize("sim,tau", GRID)
+def test_blocked_rs_equals_oracle(rs_pair, sim, tau):
+    col_r, col_s = rs_pair
+    oracle = join.naive_join(col_r, col_s, sim, tau)
+    got, stats = join.blocked_bitmap_join(
+        col_r, col_s, sim, tau, b=64, block=32, return_stats=True)
+    assert np.array_equal(oracle, got), (sim, tau, len(oracle), len(got))
+    assert stats.verified_true == len(oracle)
+    assert 0.0 <= stats.filter_ratio <= 1.0, stats
+    assert stats.candidates <= stats.total_pairs
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("sim,tau", GRID)
+def test_cpu_algos_rs_equal_oracle(rs_pair, algo, sim, tau):
+    col_r, col_s = rs_pair
+    oracle = join.naive_join(col_r, col_s, sim, tau)
+    got = cpu_algos.ALGORITHMS[algo](col_r, col_s, sim, tau)
+    assert np.array_equal(oracle, got), (algo, sim, tau, len(oracle), len(got))
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_cpu_algos_rs_with_bitmap_exact(rs_pair, algo):
+    col_r, col_s = rs_pair
+    sim, tau = "jaccard", 0.7
+    oracle = join.naive_join(col_r, col_s, sim, tau)
+    bf = BitmapFilter.build_rs(col_r.tokens, col_r.lengths,
+                               col_s.tokens, col_s.lengths, sim, tau, b=64)
+    stats = cpu_algos.AlgoStats()
+    got = cpu_algos.ALGORITHMS[algo](col_r, col_s, sim, tau,
+                                     bitmap=bf, stats=stats)
+    assert np.array_equal(oracle, got), algo
+    assert stats.results == len(oracle)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_rs_property_random_collections(seed):
+    col_r, col_s = _rs_collections(seed=seed, n_r=40, n_s=30)
+    for sim, tau in [("jaccard", 0.5), ("cosine", 0.8), ("dice", 0.95)]:
+        oracle = join.naive_join(col_r, col_s, sim, tau)
+        got = join.blocked_bitmap_join(col_r, col_s, sim, tau, b=32, block=16)
+        assert np.array_equal(oracle, got), (seed, sim, tau)
+
+
+def test_rs_planted_duplicates_found(rs_pair):
+    col_r, col_s = rs_pair
+    pairs = join.blocked_bitmap_join(col_r, col_s, "jaccard", 0.95)
+    assert len(pairs) >= 4  # the planted exact duplicates survive any tau
+
+
+def test_empty_r():
+    _, col_s = _rs_collections(seed=7)
+    empty = from_lists([])
+    assert join.naive_join(empty, col_s, "jaccard", 0.8).shape == (0, 2)
+    assert join.blocked_bitmap_join(empty, col_s, "jaccard", 0.8).shape == (0, 2)
+    for algo in ALGOS:
+        assert cpu_algos.ALGORITHMS[algo](empty, col_s, "jaccard", 0.8).shape == (0, 2)
+
+
+def test_empty_s():
+    col_r, _ = _rs_collections(seed=8)
+    empty = from_lists([])
+    assert join.naive_join(col_r, empty, "jaccard", 0.8).shape == (0, 2)
+    assert join.blocked_bitmap_join(col_r, empty, "jaccard", 0.8).shape == (0, 2)
+    for algo in ALGOS:
+        assert cpu_algos.ALGORITHMS[algo](col_r, empty, "jaccard", 0.8).shape == (0, 2)
+
+
+def test_disjoint_length_ranges_early_out():
+    """R is all short, S all long: the block walk must prune everything."""
+    short = from_lists([[1, 2], [3, 4], [2, 5], [1, 6]])
+    long_ = from_lists([list(range(i, i + 40)) for i in range(6)])
+    got, stats = join.blocked_bitmap_join(
+        short, long_, "jaccard", 0.8, block=2, return_stats=True)
+    assert got.shape == (0, 2)
+    assert stats.blocks_skipped > 0
+    assert stats.blocks_skipped <= stats.blocks_total
+    assert np.array_equal(got, join.naive_join(short, long_, "jaccard", 0.8))
+    for algo in ALGOS:
+        assert cpu_algos.ALGORITHMS[algo](short, long_, "jaccard", 0.8).shape == (0, 2)
+
+
+def test_legacy_positional_self_join_convention(rs_pair):
+    """(col, sim, tau) positional calls still mean a self-join."""
+    col_r, _ = rs_pair
+    a = join.naive_join(col_r, "jaccard", 0.7)
+    b = join.naive_join(col_r, sim="jaccard", tau=0.7)
+    assert np.array_equal(a, b)
+    c = join.blocked_bitmap_join(col_r, "jaccard", 0.7)
+    d = join.blocked_bitmap_join(col_r, sim="jaccard", tau=0.7)
+    assert np.array_equal(c, d)
+    assert np.array_equal(a, c)
+
+
+def test_rs_join_is_directional(rs_pair):
+    """R×S output is (r_index, s_index): swapping collections transposes it."""
+    col_r, col_s = rs_pair
+    ab = join.blocked_bitmap_join(col_r, col_s, "jaccard", 0.8)
+    ba = join.blocked_bitmap_join(col_s, col_r, "jaccard", 0.8)
+    assert np.array_equal(
+        ab, ba[:, ::-1][np.lexsort((ba[:, 0], ba[:, 1]))])
+
+
+def test_incremental_dedup_against_corpus():
+    from repro.data.dedup import dedup_against
+    col_r, col_s = _rs_collections(seed=9, plant=5)
+    res = dedup_against(col_r, col_s, tau=0.95, b=64, block=32)
+    assert len(res.drop_vs_corpus) >= 5        # the planted duplicates
+    assert 0.0 <= res.stats_rs.filter_ratio <= 1.0
+    assert (np.sort(np.concatenate([res.keep, res.drop_vs_corpus,
+                                    res.drop_within]))
+            == np.arange(col_s.num_sets)).all()
