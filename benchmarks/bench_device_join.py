@@ -53,4 +53,18 @@ def run() -> List[Row]:
                 f"table10_device_join_{cname}_tau{tau}", dev_t * 1e6,
                 f"speedup={cpu_t/dev_t:.2f}x vs best-CPU({cpu_name}={cpu_t*1e6:.0f}us) "
                 f"best_b={b} pairs={npairs}"))
+            # Same join through the device-resident compaction path (the
+            # dense bool tile never crosses to the host).
+            join.blocked_bitmap_join(col, "jaccard", tau, b=b, block=2048,
+                                     compaction="device")
+            t0 = time.perf_counter()
+            rpairs, rstats = join.blocked_bitmap_join(
+                col, "jaccard", tau, b=b, block=2048, compaction="device",
+                return_stats=True)
+            res_t = time.perf_counter() - t0
+            assert len(rpairs) == npairs
+            rows.append(Row(
+                f"table10_resident_join_{cname}_tau{tau}", res_t * 1e6,
+                f"host_compaction={dev_t*1e6:.0f}us b={b} pairs={npairs}",
+                stats=rstats.to_dict()))
     return rows

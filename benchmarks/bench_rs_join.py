@@ -69,6 +69,16 @@ def run() -> List[Row]:
             col_r, col_s, "jaccard", tau, b=128, block=2048, return_stats=True)
         rs_t = time.perf_counter() - t0
 
+        # device-resident compaction: same join, no dense host transfer
+        join.blocked_bitmap_join(col_r, col_s, "jaccard", tau, b=128,
+                                 block=2048, compaction="device")
+        t0 = time.perf_counter()
+        res_pairs, res_stats = join.blocked_bitmap_join(
+            col_r, col_s, "jaccard", tau, b=128, block=2048,
+            compaction="device", return_stats=True)
+        res_t = time.perf_counter() - t0
+        assert len(res_pairs) == len(rs_pairs)  # both exact
+
         join.blocked_bitmap_join(both, "jaccard", tau, b=128, block=2048)
         t0 = time.perf_counter()
         _, self_stats = join.blocked_bitmap_join(
@@ -86,8 +96,50 @@ def run() -> List[Row]:
             f"rs_join_device_tau{tau}", rs_t * 1e6,
             f"pairs={len(rs_pairs)} filter_ratio={rs_stats.filter_ratio:.4f} "
             f"self_join_RuS={self_t*1e6:.0f}us "
-            f"self_filter_ratio={self_stats.filter_ratio:.4f}"))
+            f"self_filter_ratio={self_stats.filter_ratio:.4f}",
+            stats=rs_stats.to_dict()))
+        rows.append(Row(
+            f"rs_join_resident_tau{tau}", res_t * 1e6,
+            f"pairs={len(res_pairs)} host_compaction={rs_t*1e6:.0f}us "
+            f"overflow_blocks={res_stats.overflow_blocks}",
+            stats=res_stats.to_dict()))
         rows.append(Row(
             f"rs_join_ppjoin_bf_tau{tau}", cpu_t * 1e6,
             f"device_speedup={cpu_t/max(rs_t, 1e-9):.2f}x"))
     return rows
+
+
+def run_resident_smoke() -> List[Row]:
+    """Compaction-path smoke gate (``python -m benchmarks.bench_rs_join
+    --resident``): a shrunk R×S workload through the device-resident join,
+    asserting it reproduces the host-compaction pair set exactly."""
+    import numpy as np
+
+    col_r, col_s = _two_shards(300, 150)
+    rows: List[Row] = []
+    for tau in (0.5, 0.8):
+        host = join.blocked_bitmap_join(col_r, col_s, "jaccard", tau,
+                                        b=128, block=1024)
+        join.blocked_bitmap_join(col_r, col_s, "jaccard", tau, b=128,
+                                 block=1024, compaction="device")  # warm
+        t0 = time.perf_counter()
+        res, stats = join.blocked_bitmap_join(
+            col_r, col_s, "jaccard", tau, b=128, block=1024,
+            compaction="device", return_stats=True)
+        dt = time.perf_counter() - t0
+        assert np.array_equal(host, res), f"resident != host at tau={tau}"
+        rows.append(Row(
+            f"rs_join_resident_smoke_tau{tau}", dt * 1e6,
+            f"pairs={len(res)} filter_ratio={stats.filter_ratio:.4f} "
+            f"overflow_blocks={stats.overflow_blocks}",
+            stats=stats.to_dict()))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    fn = run_resident_smoke if "--resident" in sys.argv[1:] else run
+    print("name,us_per_call,derived")
+    for r in fn():
+        print(r.csv(), flush=True)

@@ -27,9 +27,17 @@ class Row:
     name: str
     us_per_call: float
     derived: str
+    stats: Optional[dict] = None  # e.g. JoinStats.to_dict() — emitted as JSON
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+    def to_json(self) -> dict:
+        d = {"name": self.name, "us_per_call": self.us_per_call,
+             "derived": self.derived}
+        if self.stats is not None:
+            d["stats"] = self.stats
+        return d
 
 
 def timeit(fn: Callable, repeats: int = 3) -> float:

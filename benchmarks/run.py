@@ -1,15 +1,22 @@
 """Benchmark driver — one module per paper table/figure.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--smoke] [module-substring ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH]
+                                               [module-substring ...]
 Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--smoke`` runs a fast subset (and tells modules that honour
 ``REPRO_BENCH_SMOKE`` to shrink their collections) — used by
 ``scripts/check.sh`` as a does-the-benchmark-stack-still-run gate.
+
+``--json PATH`` additionally writes every row (including any attached
+``JoinStats`` dict — counters, filter_ratio, precision, overflow_blocks) to
+PATH as a JSON list, so perf/filter-ratio trajectories can be diffed across
+PRs instead of eyeballing CSV.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -35,22 +42,36 @@ SMOKE_MODULES = [
 def main() -> None:
     import importlib
 
-    smoke = "--smoke" in sys.argv[1:]
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            raise SystemExit("--json needs a path argument")
+        json_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    filters = [a for a in argv if not a.startswith("-")]
     modules = SMOKE_MODULES if smoke and not filters else MODULES
     if smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     print("name,us_per_call,derived")
     t_all = time.time()
+    all_rows = []
     for modname in modules:
         if filters and not any(f in modname for f in filters):
             continue
         t0 = time.time()
         mod = importlib.import_module(modname)
         for row in mod.run():
+            all_rows.append(row)
             print(row.csv(), flush=True)
         print(f"# {modname} done in {time.time()-t0:.1f}s", flush=True)
     print(f"# total {time.time()-t_all:.1f}s")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump([r.to_json() for r in all_rows], f, indent=1)
+        print(f"# wrote {len(all_rows)} rows to {json_path}")
 
 
 if __name__ == "__main__":

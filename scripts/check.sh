@@ -14,4 +14,10 @@ else
     python -m pytest -x -q -m "not slow"
 fi
 
-python -m benchmarks.run --smoke
+# Benchmark smoke; --json leaves a machine-readable JoinStats trail so
+# filter-ratio / perf trajectories can be diffed across PRs.
+python -m benchmarks.run --smoke --json "${REPRO_BENCH_JSON:-/tmp/repro_bench_smoke.json}"
+
+# Compaction-path smoke: the device-resident join must reproduce the host
+# path's pairs exactly on a real R×S workload.
+python -m benchmarks.bench_rs_join --resident

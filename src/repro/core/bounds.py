@@ -8,6 +8,7 @@ scalars and jnp arrays (all ops are elementwise).
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.constants import COSINE, DICE, JACCARD, OVERLAP
@@ -49,6 +50,28 @@ def equivalent_overlap(sim: str, tau: float, len_r, len_s):
     raise ValueError(f"unknown similarity {sim!r}")
 
 
+def required_overlap(sim: str, tau: float, lr, ls):
+    """float32, jnp-native twin of :func:`equivalent_overlap`.
+
+    This is the single source of truth for the threshold used on device —
+    inside the Pallas candidate/count kernels, the ring join's verification
+    and the pure-jnp kernel oracles all call this one function, so every
+    device path rounds the same way.  (:func:`equivalent_overlap` stays the
+    dtype-polymorphic host/numpy version; both compute the Table 1 formulas.)
+    """
+    lr = jnp.asarray(lr).astype(jnp.float32)
+    ls = jnp.asarray(ls).astype(jnp.float32)
+    if sim == OVERLAP:
+        return jnp.full_like(lr + ls, float(tau))
+    if sim == JACCARD:
+        return (tau / (1.0 + tau)) * (lr + ls)
+    if sim == COSINE:
+        return tau * jnp.sqrt(lr * ls)
+    if sim == DICE:
+        return (tau / 2.0) * (lr + ls)
+    raise ValueError(f"unknown similarity {sim!r}")
+
+
 # ---------------------------------------------------------------------------
 # Length filter bounds (Table 2)
 # ---------------------------------------------------------------------------
@@ -70,6 +93,23 @@ def length_bounds(sim: str, tau: float, len_r):
     else:
         raise ValueError(f"unknown similarity {sim!r}")
     return lower, upper
+
+
+def length_window_int(sim: str, tau: float, len_r):
+    """Integer-exact admissible |s| window per |r|: (ceil(lower), floor(upper)).
+
+    For integer |s| the real-valued Table 2 window ``lower <= |s| <= upper``
+    is exactly ``ceil(lower) <= |s| <= floor(upper)``.  Computing the integer
+    bounds once (in float64, on host) lets device code apply the window with
+    pure int32 comparisons — bit-identical to the host path's float
+    comparison, with only O(block) scalars shipped instead of a dense mask.
+    """
+    lo, hi = length_bounds(sim, tau, np.asarray(len_r, dtype=np.float64))
+    lo_i = np.maximum(np.ceil(lo), 0.0)
+    int32_max = float(np.iinfo(np.int32).max)
+    hi_i = np.where(np.isfinite(hi), np.floor(hi), int32_max)
+    return (np.minimum(lo_i, int32_max).astype(np.int32),
+            np.minimum(hi_i, int32_max).astype(np.int32))
 
 
 # ---------------------------------------------------------------------------

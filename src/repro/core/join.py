@@ -5,13 +5,17 @@ Three tiers, mirroring the paper's structure:
 * :func:`naive_join` — Algorithm 1, the O(|R|·|S|) oracle (tests/small inputs).
 * :func:`blocked_bitmap_join` — the TPU adaptation of the paper's GPU
   Algorithm 8: length-sorted collection, block-level length-filter early-out,
-  fused bitmap-filter tiles (Pallas), dense-mask compaction, batched exact
-  verification on device. Host drives the block loop (like the GPU host code
-  drives kernel launches).
-* :func:`ring_join_sharded` — multi-device version: R is sharded over the
-  mesh's batch axes, S blocks circulate via ``collective_permute``; each ring
-  step runs the same fused filter + verification locally. Used by the
-  dedup pipeline and by the dry-run.
+  fused bitmap-filter tiles (Pallas), candidate compaction (on host, or fully
+  device-resident with ``compaction="device"``), batched exact verification
+  on device. Host drives the block loop (like the GPU host code drives
+  kernel launches).
+* :func:`ring_join_sharded` / :func:`ring_join` — multi-device version: R is
+  sharded over the mesh's batch axes, S blocks circulate via
+  ``collective_permute``; each ring step runs the same fused filter +
+  fixed-capacity compaction + verification locally.  ``ring_join`` is the
+  exactness-preserving driver: it densely re-runs any (device, step) tile
+  whose candidate list overflowed.  Used by the dedup pipeline and the
+  dry-run.
 
 Every driver supports both the paper's general two-collection R×S join and
 the optimized self-join special case.  Self-join is selected by omitting the
@@ -98,6 +102,7 @@ class JoinStats:
     blocks_skipped: int = 0       # block pairs pruned by the length filter
     candidates: int = 0           # pairs surviving the bitmap filter
     verified_true: int = 0        # final result size
+    overflow_blocks: int = 0      # device-compaction tiles escalated to dense
 
     @property
     def filter_ratio(self) -> float:
@@ -113,10 +118,120 @@ class JoinStats:
             return 1.0
         return self.verified_true / self.candidates
 
+    def to_dict(self) -> dict:
+        """Counters + derived ratios as plain JSON-able types (benchmarks
+        emit these so filter-ratio/perf trajectories can be diffed)."""
+        d = dataclasses.asdict(self)
+        d["filter_ratio"] = self.filter_ratio
+        d["precision"] = self.precision
+        return d
+
 
 def _length_sorted(col: Collection) -> tuple[Collection, np.ndarray]:
     order = np.argsort(col.lengths, kind="stable")
     return Collection(tokens=col.tokens[order], lengths=col.lengths[order]), order
+
+
+def _bucket_capacity(n: int, floor: int = 128) -> int:
+    """Round a measured candidate count up to a power of two (>= floor).
+
+    The compaction capacity is a static (compile-time) size; bucketing keeps
+    the number of distinct jit variants logarithmic in the observed counts.
+    """
+    return max(floor, 1 << max(int(n) - 1, 0).bit_length())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sim", "tau", "cap", "diag", "cutoff", "impl", "use_bitmap"),
+)
+def _resident_block_step(
+    tokens_r, lengths_r, words_r, tokens_s, lengths_s, words_s,
+    lo_s, hi_s, r0, s0,
+    *, sim: str, tau: float, cap: int, diag: bool, cutoff: int, impl: str,
+    use_bitmap: bool = True,
+):
+    """One fused, fully device-resident block-pair step (Algorithm 8's local
+    candidate list, TPU-shaped).
+
+    Bitmap verdict -> integer length-window mask -> fixed-capacity compaction
+    (``jnp.nonzero(size=cap)``) -> exact searchsorted verification -> second
+    compaction down to verified pairs, all inside one jit.  Only the
+    ``(cap, 2)`` compacted pair buffer and five scalars are ever transferred
+    to the host; the dense ``(TR, TS)`` verdict tile never leaves the device.
+
+    Returns ``(pairs, n_win, n_cand, n_ok, overflow)``: global sorted-index
+    pairs (slots ``>= n_ok`` are garbage), window-pair / candidate / verified
+    counts, and whether the candidate count exceeded ``cap`` (the caller then
+    escalates this block pair to the dense host-compaction path).
+    """
+    win = ((lengths_s[None, :] >= lo_s[:, None])
+           & (lengths_s[None, :] <= hi_s[:, None])
+           & (lengths_r[:, None] > 0) & (lengths_s[None, :] > 0))
+    if diag:
+        win &= (jnp.arange(win.shape[0])[:, None]
+                < jnp.arange(win.shape[1])[None, :])
+    if use_bitmap:
+        cand = kops.candidate_matrix(
+            words_r, words_s, lengths_r, lengths_s, sim=sim, tau=tau,
+            self_join=False, cutoff=cutoff, impl=impl) & win
+    else:
+        cand = win
+    n_win = jnp.sum(win, dtype=jnp.int32)
+    n_cand = jnp.sum(cand, dtype=jnp.int32)
+    ii, jj = jnp.nonzero(cand, size=cap, fill_value=0)
+    slot_ok = jnp.arange(cap) < n_cand
+    o = verify.pairwise_overlap(tokens_r[ii], tokens_s[jj])
+    need = bounds.equivalent_overlap(sim, tau, lengths_r[ii], lengths_s[jj])
+    ok = slot_ok & (o >= need)
+    n_ok = jnp.sum(ok, dtype=jnp.int32)
+    vi = jnp.nonzero(ok, size=cap, fill_value=0)[0]
+    pairs = jnp.stack([ii[vi].astype(jnp.int32) + r0,
+                       jj[vi].astype(jnp.int32) + s0], axis=1)
+    return pairs, n_win, n_cand, n_ok, n_cand > cap
+
+
+def _dense_block_verify(
+    tokens_r, lengths_r, words_r, tokens_s, lengths_s, words_s,
+    np_len_r, np_len_s, r0, r1, s0, s1,
+    *, sim, tau, cutoff, impl, diag, self_join, use_bitmap=True,
+):
+    """Host-compaction path for one block pair: dense mask -> ``np.nonzero``
+    on host -> batched exact verification.  The classic route, and the dense
+    escalation target when a device-resident tile overflows its capacity.
+
+    Returns ``(n_win, n_cand, verified sorted-index pairs int64[K, 2])``.
+    """
+    win = _window_pair_mask(np_len_r[r0:r1], np_len_s[s0:s1], sim, tau)
+    if diag:
+        win = np.triu(win, k=1)
+    if use_bitmap:
+        cand = kops.candidate_matrix(
+            words_r[r0:r1], words_s[s0:s1],
+            lengths_r[r0:r1], lengths_s[s0:s1],
+            sim=sim, tau=float(tau), self_join=False,
+            cutoff=int(cutoff), impl=impl)
+        # The fused kernel does not apply the length filter; without this
+        # intersection `candidates` could exceed `total_pairs` and
+        # filter_ratio could go negative.
+        cand = np.asarray(cand) & win
+    else:
+        cand = win
+    n_win = int(win.sum())
+    ii, jj = np.nonzero(cand)
+    if len(ii) == 0:
+        return n_win, 0, np.zeros((0, 2), dtype=np.int64)
+    gi = jnp.asarray(ii + r0)
+    gj = jnp.asarray(jj + s0)
+    if self_join:
+        ok = np.asarray(verify.verify_pairs(
+            tokens_r, lengths_r, gi, gj, sim, float(tau)))
+    else:
+        ok = np.asarray(verify.verify_pairs_rs(
+            tokens_r, lengths_r, tokens_s, lengths_s, gi, gj,
+            sim, float(tau)))
+    pairs = np.stack([np.asarray(gi)[ok], np.asarray(gj)[ok]], axis=1)
+    return n_win, len(ii), pairs.astype(np.int64)
 
 
 def blocked_bitmap_join(
@@ -131,6 +246,8 @@ def blocked_bitmap_join(
     impl: str = "auto",
     use_cutoff: bool = True,
     use_bitmap: bool = True,
+    compaction: str = "host",
+    capacity: int | None = None,
     return_stats: bool = False,
 ):
     """Exact join; returns int64[K, 2] pairs in original indices.
@@ -139,11 +256,28 @@ def blocked_bitmap_join(
     R×S grid for two collections, the upper triangle for a self-join. Because
     blocks are length-contiguous, the Table 2 length window prunes whole block
     pairs in both directions (the TPU analogue of the paper's sorted
-    inverted-list early termination). Surviving tiles run the fused bitmap
-    kernel; bitmap candidates are intersected with the per-pair length-window
-    mask (so ``JoinStats.candidates <= total_pairs`` always), compacted on
-    host and exactly verified on device.
+    inverted-list early termination).
+
+    Surviving block pairs run one of two compaction modes:
+
+    * ``compaction="host"`` — the original path: the fused bitmap kernel's
+      dense bool tile is shipped to the host, ``np.nonzero`` compacts it
+      there, and the candidate indices round-trip back for verification.
+    * ``compaction="device"`` — the resident path (the paper's Algorithm 8
+      local candidate lists): a tile-count prepass (`kops.count_candidates`)
+      measures the real candidate count, a power-of-two capacity is sized
+      from it, and one jit'd step fuses verdict -> length-window mask ->
+      fixed-capacity compaction -> exact verification, so only compacted
+      ``(i, j)`` pairs and counters ever cross to the host.  Passing an
+      explicit ``capacity`` skips the prepass; a block pair whose candidate
+      count exceeds it is flagged and escalated to the dense host path
+      (``JoinStats.overflow_blocks`` counts these), preserving exactness.
+
+    Both modes return identical pairs and bit-identical ``JoinStats``
+    counters (property-tested against the ``naive_join`` oracle).
     """
+    if compaction not in ("host", "device"):
+        raise ValueError(f"compaction must be 'host' or 'device', got {compaction!r}")
     col_s, sim, tau = _normalize_rs_args(col_s, sim, tau)
     self_join = col_s is None
     scol_r, order_r = _length_sorted(col_r)
@@ -182,6 +316,7 @@ def blocked_bitmap_join(
         # [lo(min |r|), hi(max |r|)].
         lo_r0, _ = bounds.length_bounds(sim, tau, max(min_lr, 1))
         _, hi_r1 = bounds.length_bounds(sim, tau, max(max_lr, 1))
+        win_lo = win_hi = None  # per-row integer windows, built lazily per bi
         for bj in range(bi if self_join else 0, nb_s):
             s0, s1 = bj * block, min((bj + 1) * block, ns)
             stats.blocks_total += 1
@@ -198,40 +333,74 @@ def blocked_bitmap_join(
             if max_ls < lo_r0:
                 stats.blocks_skipped += 1
                 continue
-            win = _window_pair_mask(np_len_r[r0:r1], np_len_s[s0:s1], sim, tau)
-            if self_join and bi == bj:
-                win = np.triu(win, k=1)
-            stats.total_pairs += int(win.sum())
-            if use_bitmap:
-                cand = kops.candidate_matrix(
-                    words_r[r0:r1], words_s[s0:s1],
-                    lengths_r[r0:r1], lengths_s[s0:s1],
-                    sim=sim, tau=float(tau), self_join=False,
-                    cutoff=int(cutoff), impl=impl)
-                # The fused kernel does not apply the length filter; without
-                # this intersection `candidates` could exceed `total_pairs`
-                # and filter_ratio could go negative.
-                cand = np.asarray(cand) & win
-            else:
-                cand = win
-            ii, jj = np.nonzero(cand)
-            if len(ii) == 0:
+            diag = self_join and bi == bj
+
+            if compaction == "host":
+                n_win, n_cand, vpairs = _dense_block_verify(
+                    tokens_r, lengths_r, words_r, tokens_s, lengths_s, words_s,
+                    np_len_r, np_len_s, r0, r1, s0, s1,
+                    sim=sim, tau=tau, cutoff=cutoff, impl=impl, diag=diag,
+                    self_join=self_join, use_bitmap=use_bitmap)
+                stats.total_pairs += n_win
+                stats.candidates += n_cand
+                stats.verified_true += len(vpairs)
+                if len(vpairs):
+                    pairs_out.append(np.stack(
+                        [order_r[vpairs[:, 0]], order_s[vpairs[:, 1]]], axis=1))
                 continue
-            stats.candidates += len(ii)
-            gi = jnp.asarray(ii + r0)
-            gj = jnp.asarray(jj + s0)
-            if self_join:
-                ok = np.asarray(verify.verify_pairs(
-                    tokens_r, lengths_r, gi, gj, sim, float(tau)))
+
+            # --- device-resident compaction ---
+            if win_lo is None:
+                win_lo, win_hi = bounds.length_window_int(sim, tau, np_len_r[r0:r1])
+                win_lo, win_hi = jnp.asarray(win_lo), jnp.asarray(win_hi)
+            if capacity is None:
+                # Tile-count prepass: size the capacity from the real counts
+                # (only two int32 grids cross to the host).
+                nwin_t, ncand_t = kops.count_candidates(
+                    words_r[r0:r1], words_s[s0:s1],
+                    lengths_r[r0:r1], lengths_s[s0:s1], win_lo, win_hi,
+                    sim=sim, tau=float(tau), self_join=diag,
+                    cutoff=int(cutoff), impl=impl)
+                n_win = int(np.asarray(nwin_t).sum())
+                n_cand_pre = int(np.asarray(ncand_t).sum())
+                stats.total_pairs += n_win
+                if not use_bitmap:
+                    n_cand_pre = n_win
+                if n_cand_pre == 0:
+                    continue
+                cap = min(_bucket_capacity(n_cand_pre), (r1 - r0) * (s1 - s0))
             else:
-                ok = np.asarray(verify.verify_pairs_rs(
-                    tokens_r, lengths_r, tokens_s, lengths_s, gi, gj,
-                    sim, float(tau)))
-            if ok.any():
-                stats.verified_true += int(ok.sum())
-                pairs_out.append(
-                    np.stack([order_r[np.asarray(gi)[ok]],
-                              order_s[np.asarray(gj)[ok]]], axis=1))
+                cap = int(capacity)
+            pairs_d, n_win_d, n_cand_d, n_ok_d, ovf = _resident_block_step(
+                tokens_r[r0:r1], lengths_r[r0:r1], words_r[r0:r1],
+                tokens_s[s0:s1], lengths_s[s0:s1], words_s[s0:s1],
+                win_lo, win_hi, jnp.int32(r0), jnp.int32(s0),
+                sim=sim, tau=float(tau), cap=cap, diag=diag,
+                cutoff=int(cutoff), impl=impl, use_bitmap=use_bitmap)
+            if capacity is not None:
+                stats.total_pairs += int(n_win_d)
+            stats.candidates += int(n_cand_d)
+            if bool(ovf):
+                # Escalation: the fixed-capacity list truncated this tile —
+                # re-run it densely (host compaction) for exactness.  The
+                # counters above are exact (counted before truncation).
+                stats.overflow_blocks += 1
+                _, _, vpairs = _dense_block_verify(
+                    tokens_r, lengths_r, words_r, tokens_s, lengths_s, words_s,
+                    np_len_r, np_len_s, r0, r1, s0, s1,
+                    sim=sim, tau=tau, cutoff=cutoff, impl=impl, diag=diag,
+                    self_join=self_join, use_bitmap=use_bitmap)
+                stats.verified_true += len(vpairs)
+                if len(vpairs):
+                    pairs_out.append(np.stack(
+                        [order_r[vpairs[:, 0]], order_s[vpairs[:, 1]]], axis=1))
+                continue
+            k = int(n_ok_d)
+            stats.verified_true += k
+            if k:
+                vp = np.asarray(pairs_d)[:k].astype(np.int64)
+                pairs_out.append(np.stack(
+                    [order_r[vp[:, 0]], order_s[vp[:, 1]]], axis=1))
 
     if pairs_out:
         pairs = np.concatenate(pairs_out, axis=0)
@@ -248,10 +417,14 @@ def blocked_bitmap_join(
 
 
 def _window_pair_mask(len_r: np.ndarray, len_s: np.ndarray, sim: str, tau: float) -> np.ndarray:
-    lo, hi = bounds.length_bounds(sim, tau, len_r.astype(np.float64)[:, None])
-    ls = len_s.astype(np.float64)[None, :]
-    mask = (ls >= lo) & (ls <= hi) & (len_r[:, None] > 0) & (len_s[None, :] > 0)
-    return mask
+    # Integer-exact form of the Table 2 window: identical to comparing the
+    # real-valued bounds (lengths are integers), and the same int32 test the
+    # device-resident step applies — so host and device paths agree on
+    # `total_pairs` bit-for-bit.
+    lo_i, hi_i = bounds.length_window_int(sim, tau, len_r)
+    ls = len_s[None, :]
+    return ((ls >= lo_i[:, None]) & (ls <= hi_i[:, None])
+            & (len_r[:, None] > 0) & (len_s[None, :] > 0))
 
 
 # ---------------------------------------------------------------------------
@@ -289,9 +462,10 @@ def ring_join_sharded(
     Candidates are compacted into a fixed ``capacity_per_step`` buffer per
     device — the TPU analogue of Algorithm 8's 2048-entry thread-local lists.
     An overflowing step silently truncates its candidate list (``jnp.nonzero``
-    drops everything beyond ``cap``), so it is flagged *per step*: the caller
-    re-runs exactly the flagged (device, step) tiles densely, preserving
-    exactness.
+    drops everything beyond ``cap``), so it is flagged *per step*: the
+    :func:`ring_join` driver re-runs exactly the flagged (device, step) tiles
+    densely and merges the results, preserving exactness.  Call that wrapper
+    unless you want to handle the escalation yourself.
 
     Returns ``(pairs, valid, counters, overflow_steps)``:
       pairs: int32[n_dev * steps * cap, 2] global (i, j) ids (garbage where
@@ -343,7 +517,7 @@ def ring_join_sharded(
             ii, jj = jnp.nonzero(cand, size=cap, fill_value=0)
             slot_valid = jnp.arange(cap) < n_cand
             ok = verify.pairwise_overlap(tok[ii], s_tok[jj])
-            need = _need(sim, tau, length[ii], s_len[jj])
+            need = bounds.equivalent_overlap(sim, tau, length[ii], s_len[jj])
             ok_mask = slot_valid & (ok >= need)
             out_pairs = jnp.stack([ii + my * shard_r,
                                    jj + s_dev * shard_s], axis=1).astype(jnp.int32)
@@ -373,15 +547,95 @@ def ring_join_sharded(
     return fn(tokens, lengths, words, tokens_s, lengths_s, words_s)
 
 
-def _need(sim: str, tau: float, lr, ls):
-    lr = lr.astype(jnp.float32)
-    ls = ls.astype(jnp.float32)
-    if sim == "overlap":
-        return jnp.full_like(lr + ls, float(tau))
-    if sim == "jaccard":
-        return (tau / (1.0 + tau)) * (lr + ls)
-    if sim == "cosine":
-        return tau * jnp.sqrt(lr * ls)
-    if sim == "dice":
-        return (tau / 2.0) * (lr + ls)
-    raise ValueError(sim)
+def ring_join(
+    tokens: jnp.ndarray,
+    lengths: jnp.ndarray,
+    words: jnp.ndarray,
+    *,
+    mesh,
+    axis: str | tuple[str, ...],
+    sim: str,
+    tau: float,
+    tokens_s: jnp.ndarray | None = None,
+    lengths_s: jnp.ndarray | None = None,
+    words_s: jnp.ndarray | None = None,
+    cutoff: int = 1 << 30,
+    impl: str = "ref",
+    capacity_per_step: int | None = None,
+    return_stats: bool = False,
+):
+    """Exact distributed join: ring sweep + dense re-run of overflowed tiles.
+
+    Drives :func:`ring_join_sharded` and implements the escalation its
+    fixed-capacity compaction requires: every flagged ``(device, step)`` tile
+    — one R shard against the S shard it held at that step, whose candidate
+    count exceeded ``capacity_per_step`` — is recomputed densely (fused
+    bitmap filter, host compaction, batched exact verification) and its
+    complete pair set replaces the truncated one.  Tiles that did not
+    overflow are taken from the ring output as-is, so the re-run cost is
+    proportional to the overflowed fraction only.
+
+    Returns the final exact pair set as lexicographically sorted
+    ``int64[K, 2]`` global indices — ``(i, j)`` with ``i < j`` for a
+    self-join (S operands omitted), ``(r_index, s_index)`` otherwise — i.e.
+    exactly :func:`naive_join`'s pairs over the same (padded) arrays.  With
+    ``return_stats=True`` also returns ``(counters, overflow_steps)`` as
+    numpy arrays (see :func:`ring_join_sharded`); the per-device verified
+    counters are reconciled with the dense re-runs, so
+    ``counters[:, 1].sum() == len(pairs)`` even under overflow.
+    """
+    rs_join = tokens_s is not None
+    if not rs_join:
+        tokens_s, lengths_s, words_s = tokens, lengths, words
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    shard_r = tokens.shape[0] // n_dev
+    shard_s = tokens_s.shape[0] // n_dev
+
+    pairs_d, valid_d, counters_d, overflow_d = ring_join_sharded(
+        tokens, lengths, words, mesh=mesh, axis=axis, sim=sim, tau=tau,
+        tokens_s=tokens_s if rs_join else None,
+        lengths_s=lengths_s if rs_join else None,
+        words_s=words_s if rs_join else None,
+        cutoff=cutoff, impl=impl, capacity_per_step=capacity_per_step)
+
+    pairs = np.asarray(pairs_d)
+    valid = np.asarray(valid_d)
+    counters = np.array(counters_d)  # writable: verified gets reconciled below
+    overflow = np.asarray(overflow_d)
+    cap = pairs.shape[0] // (n_dev * n_dev)
+    p4 = pairs.reshape(n_dev, n_dev, cap, 2)
+    v3 = valid.reshape(n_dev, n_dev, cap)
+    # Complete tiles keep their ring output; overflowed tiles are dropped
+    # wholesale (their candidate list was truncated) and recomputed densely.
+    out = [p4[v3 & ~overflow[:, :, None]].reshape(-1, 2)]
+    for d, t in zip(*np.nonzero(overflow)):
+        s_dev = (int(d) - int(t)) % n_dev
+        r_sl = slice(int(d) * shard_r, (int(d) + 1) * shard_r)
+        s_sl = slice(s_dev * shard_s, (s_dev + 1) * shard_s)
+        cand = np.asarray(kops.candidate_matrix(
+            words[r_sl], words_s[s_sl], lengths[r_sl], lengths_s[s_sl],
+            sim=sim, tau=float(tau), self_join=False,
+            cutoff=int(cutoff), impl=impl))
+        ii, jj = np.nonzero(cand)
+        gi = ii + int(d) * shard_r
+        gj = jj + s_dev * shard_s
+        if not rs_join:
+            keep = gi < gj
+            gi, gj = gi[keep], gj[keep]
+        n_ok = 0
+        if len(gi):
+            ok = np.asarray(verify.verify_pairs_rs(
+                tokens, lengths, tokens_s, lengths_s,
+                jnp.asarray(gi), jnp.asarray(gj), sim, float(tau)))
+            n_ok = int(ok.sum())
+            if n_ok:
+                out.append(np.stack([gi[ok], gj[ok]], axis=1))
+        # Reconcile the per-device verified counter: the ring step only saw
+        # the <= cap truncated slots of this tile.
+        counters[int(d), 1] += n_ok - int(v3[int(d), int(t)].sum())
+    merged = np.concatenate(out, axis=0).astype(np.int64)
+    merged = merged[np.lexsort((merged[:, 1], merged[:, 0]))]
+    if return_stats:
+        return merged, counters, overflow
+    return merged

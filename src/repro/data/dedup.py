@@ -63,11 +63,19 @@ class DedupResult:
 
 
 def dedup_collection(col: Collection, tau: float = 0.8, *, b: int = 128,
-                     block: int = 4096, impl: str = "auto") -> DedupResult:
+                     block: int = 4096, impl: str = "auto",
+                     compaction: str = "device") -> DedupResult:
     """Exact near-dup removal at Jaccard >= tau. Keeps the smallest index of
-    each duplicate cluster (deterministic)."""
+    each duplicate cluster (deterministic).
+
+    Runs the device-resident join by default: candidate compaction and
+    verification stay on the accelerator, so per-block traffic is a small
+    compacted pair buffer instead of a dense bool tile — the difference
+    between feasible and not at corpus scale.
+    """
     pairs, stats = blocked_bitmap_join(
-        col, JACCARD, tau, b=b, block=block, impl=impl, return_stats=True)
+        col, JACCARD, tau, b=b, block=block, impl=impl,
+        compaction=compaction, return_stats=True)
     uf = _UnionFind(col.num_sets)
     for i, j in pairs:
         uf.union(int(i), int(j))
@@ -100,16 +108,19 @@ class IncrementalDedupResult:
 
 def dedup_against(corpus: Collection, new: Collection, tau: float = 0.8, *,
                   b: int = 128, block: int = 4096, impl: str = "auto",
-                  within: bool = True) -> IncrementalDedupResult:
+                  within: bool = True,
+                  compaction: str = "device") -> IncrementalDedupResult:
     """Dedup a new shard against an already-deduped corpus (R×S join).
 
     Any set in ``new`` at Jaccard >= tau to a corpus set is dropped (the
     corpus copy wins); survivors are then optionally self-deduped.  Both
     collections must live in one token space (same shingler / tokenizer run).
+    Uses the device-resident compaction path by default (see
+    :func:`dedup_collection`).
     """
     pairs_rs, stats_rs = blocked_bitmap_join(
         corpus, new, JACCARD, tau, b=b, block=block, impl=impl,
-        return_stats=True)
+        compaction=compaction, return_stats=True)
     dup_vs_corpus = (np.unique(pairs_rs[:, 1]) if len(pairs_rs)
                      else np.zeros((0,), dtype=np.int64))
     mask = np.ones(new.num_sets, dtype=bool)
@@ -120,7 +131,8 @@ def dedup_against(corpus: Collection, new: Collection, tau: float = 0.8, *,
     if within and len(survivors):
         sub = Collection(tokens=new.tokens[survivors],
                          lengths=new.lengths[survivors])
-        res = dedup_collection(sub, tau, b=b, block=block, impl=impl)
+        res = dedup_collection(sub, tau, b=b, block=block, impl=impl,
+                               compaction=compaction)
         keep = survivors[res.keep]
         drop_within = survivors[res.drop]
     return IncrementalDedupResult(

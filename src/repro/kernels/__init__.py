@@ -3,6 +3,8 @@
 * :mod:`repro.kernels.bitmap_filter` — tiled SWAR xor+popcount Hamming /
   fused candidate kernels (pl.pallas_call + BlockSpec VMEM tiling).
 * :mod:`repro.kernels.bitplane` — MXU int8 bit-plane reformulation.
+* :mod:`repro.kernels.compaction` — tile-count prepass for device-resident
+  candidate compaction (sizes the fixed-capacity buffers from real counts).
 * :mod:`repro.kernels.ops` — jit'd public wrappers with impl dispatch.
 * :mod:`repro.kernels.ref` — pure-jnp oracles for validation.
 """

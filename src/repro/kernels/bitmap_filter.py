@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.constants import COSINE, DICE, JACCARD, OVERLAP
+from repro.core import bounds
 
 DEFAULT_TILE = 256
 
@@ -106,38 +106,37 @@ def hamming_matrix_pallas(
 # Kernel 2: fused candidate kernel (bound + threshold + triangle mask)
 # ---------------------------------------------------------------------------
 
-def _required_overlap(sim: str, tau: float, lr: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
-    lr = lr.astype(jnp.float32)
-    ls = ls.astype(jnp.float32)
-    if sim == OVERLAP:
-        return jnp.full_like(lr + ls, float(tau))
-    if sim == JACCARD:
-        return (tau / (1.0 + tau)) * (lr + ls)
-    if sim == COSINE:
-        return tau * jnp.sqrt(lr * ls)
-    if sim == DICE:
-        return (tau / 2.0) * (lr + ls)
-    raise ValueError(sim)
+def _tile_verdict(r_words: jnp.ndarray, s_words: jnp.ndarray,
+                  lr: jnp.ndarray, ls: jnp.ndarray,
+                  *, sim: str, tau: float, cutoff: int) -> jnp.ndarray:
+    """Fused bitmap-filter verdict for one tile -> bool[TR, TS].
+
+    Shared by the candidate kernel below and the count prepass kernel in
+    :mod:`repro.kernels.compaction` so both apply exactly the same test.
+    """
+    ham = _tile_hamming(r_words, s_words)
+    lsum = lr[:, None] + ls[None, :]
+    ub = (lsum - ham) // 2
+    # Tighten: overlap can never exceed min(|r|, |s|).
+    ub = jnp.minimum(ub, jnp.minimum(lr[:, None], ls[None, :]))
+    need = bounds.required_overlap(sim, tau, lr[:, None], ls[None, :])
+    passed = ub.astype(jnp.float32) >= need
+    # Cutoff (Alg. 7): past the precision cliff the bitmap test is void —
+    # such pairs must be *kept* (conservative), not pruned.
+    over_cut = (lr[:, None] > cutoff) | (ls[None, :] > cutoff)
+    cand = passed | over_cut
+    # Padding rows have length 0 -> never candidates.
+    cand &= (lr[:, None] > 0) & (ls[None, :] > 0)
+    return cand
 
 
 def _make_candidate_kernel(sim: str, tau: float, self_join: bool, tile_r: int, tile_s: int,
                            cutoff: int):
     def kernel(r_ref, s_ref, lr_ref, ls_ref, out_ref):
-        ham = _tile_hamming(r_ref[...], s_ref[...])
         lr = lr_ref[...].astype(jnp.int32)  # (TR,)
         ls = ls_ref[...].astype(jnp.int32)  # (TS,)
-        lsum = lr[:, None] + ls[None, :]
-        ub = (lsum - ham) // 2
-        # Tighten: overlap can never exceed min(|r|, |s|).
-        ub = jnp.minimum(ub, jnp.minimum(lr[:, None], ls[None, :]))
-        need = _required_overlap(sim, tau, lr[:, None], ls[None, :])
-        passed = ub.astype(jnp.float32) >= need
-        # Cutoff (Alg. 7): past the precision cliff the bitmap test is void —
-        # such pairs must be *kept* (conservative), not pruned.
-        over_cut = (lr[:, None] > cutoff) | (ls[None, :] > cutoff)
-        cand = passed | over_cut
-        # Padding rows have length 0 -> never candidates.
-        cand &= (lr[:, None] > 0) & (ls[None, :] > 0)
+        cand = _tile_verdict(r_ref[...], s_ref[...], lr, ls,
+                             sim=sim, tau=tau, cutoff=cutoff)
         if self_join:
             gi = pl.program_id(0) * tile_r + jax.lax.iota(jnp.int32, tile_r)
             gj = pl.program_id(1) * tile_s + jax.lax.iota(jnp.int32, tile_s)

@@ -1,0 +1,96 @@
+"""Pallas tile-count prepass for device-resident candidate compaction.
+
+The resident blocked join (``core/join.py``, ``compaction="device"``) keeps
+filtering *and* compaction on device: candidates are packed into a
+fixed-capacity buffer with ``jnp.nonzero(size=cap)`` inside one jit'd step,
+so only compacted pairs and a few counters ever cross to the host.  The
+capacity has to be a static (compile-time) size, and guessing it wrong means
+either wasted VMEM/transfer or an overflow escalation — so this kernel
+measures the *real* per-tile counts first.
+
+Each grid program evaluates the same fused verdict as the candidate kernel
+(:func:`repro.kernels.bitmap_filter._tile_verdict` — Eq. 2 bound, Table 1
+threshold, cutoff, padding rows) plus the integer length-window and the
+self-join triangle, then writes back two int32 scalars per tile: the number
+of window-surviving pairs and the number of bitmap candidates.  O(NR*NS)
+compute like the filter itself, but only ``O(grid)`` bytes of output —
+roughly ``tile_r * tile_s / 4`` less HBM/host traffic than the dense bool
+verdict tile the host-compaction path ships.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitmap_filter import DEFAULT_TILE, _tile_verdict
+
+
+def _make_count_kernel(sim: str, tau: float, self_join: bool, cutoff: int,
+                       window: bool, tile_r: int, tile_s: int):
+    def kernel(r_ref, s_ref, lr_ref, ls_ref, lo_ref, hi_ref, win_ref, cand_ref):
+        lr = lr_ref[...].astype(jnp.int32)  # (TR,)
+        ls = ls_ref[...].astype(jnp.int32)  # (TS,)
+        win = (lr[:, None] > 0) & (ls[None, :] > 0)
+        if window:
+            lo = lo_ref[...].astype(jnp.int32)
+            hi = hi_ref[...].astype(jnp.int32)
+            win &= (ls[None, :] >= lo[:, None]) & (ls[None, :] <= hi[:, None])
+        if self_join:
+            gi = pl.program_id(0) * tile_r + jax.lax.iota(jnp.int32, tile_r)
+            gj = pl.program_id(1) * tile_s + jax.lax.iota(jnp.int32, tile_s)
+            win &= gi[:, None] < gj[None, :]
+        cand = _tile_verdict(r_ref[...], s_ref[...], lr, ls,
+                             sim=sim, tau=tau, cutoff=cutoff) & win
+        win_ref[0, 0] = jnp.sum(win.astype(jnp.int32))
+        cand_ref[0, 0] = jnp.sum(cand.astype(jnp.int32))
+
+    return kernel
+
+
+def count_candidates_pallas(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    lo_s: jnp.ndarray,
+    hi_s: jnp.ndarray,
+    *,
+    sim: str,
+    tau: float,
+    self_join: bool,
+    cutoff: int = 1 << 30,
+    window: bool = True,
+    tile_r: int = DEFAULT_TILE,
+    tile_s: int = DEFAULT_TILE,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tile (window-pair count, candidate count) -> two int32[GR, GS].
+
+    NR/NS must be multiples of the tile sizes (ops.py pads; padded rows have
+    length 0 and count in neither output).  ``lo_s``/``hi_s`` are int32[NR]
+    admissible |s| windows per R row (``bounds.length_window_int``).
+    """
+    nr, w = words_r.shape
+    ns, _ = words_s.shape
+    grid = (nr // tile_r, ns // tile_s)
+    kernel = _make_count_kernel(sim, float(tau), self_join, int(cutoff),
+                                window, tile_r, tile_s)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_s, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_r,), lambda i, j: (i,)),
+            pl.BlockSpec((tile_s,), lambda i, j: (j,)),
+            pl.BlockSpec((tile_r,), lambda i, j: (i,)),
+            pl.BlockSpec((tile_r,), lambda i, j: (i,)),
+        ],
+        out_specs=(scalar_spec, scalar_spec),
+        out_shape=(jax.ShapeDtypeStruct(grid, jnp.int32),
+                   jax.ShapeDtypeStruct(grid, jnp.int32)),
+        interpret=interpret,
+    )(words_r, words_s, len_r, len_s, lo_s, hi_s)

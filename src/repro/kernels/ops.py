@@ -20,8 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bounds
 from repro.core.bitmap import popcount_rows, unpack_bits
-from repro.kernels import bitplane, bitmap_filter, ref
+from repro.kernels import bitplane, bitmap_filter, compaction, ref
 
 _TILE = bitmap_filter.DEFAULT_TILE
 
@@ -118,7 +119,7 @@ def candidate_matrix(
         lr = len_r.astype(jnp.int32)[:, None]
         ls = len_s.astype(jnp.int32)[None, :]
         ub = jnp.minimum((lr + ls - ham) // 2, jnp.minimum(lr, ls))
-        need = ref.required_overlap_ref(sim, tau, lr, ls)
+        need = bounds.required_overlap(sim, tau, lr, ls)
         cand = (ub.astype(jnp.float32) >= need) | (lr > cutoff) | (ls > cutoff)
         cand &= (lr > 0) & (ls > 0)
         if self_join:
@@ -131,7 +132,7 @@ def candidate_matrix(
         lr = len_r.astype(jnp.int32)[:, None]
         ls = len_s.astype(jnp.int32)[None, :]
         ub = jnp.minimum((lr + ls - ham) // 2, jnp.minimum(lr, ls))
-        need = ref.required_overlap_ref(sim, tau, lr, ls)
+        need = bounds.required_overlap(sim, tau, lr, ls)
         cand = (ub.astype(jnp.float32) >= need) | (lr > cutoff) | (ls > cutoff)
         cand &= (lr > 0) & (ls > 0)
         if self_join:
@@ -145,3 +146,59 @@ def candidate_matrix(
         pr, ps, plr, pls, sim=sim, tau=tau, self_join=self_join,
         cutoff=cutoff, tile_r=tile, tile_s=tile, interpret=interpret)
     return out[:nr, :ns]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sim", "tau", "self_join", "cutoff", "window", "impl",
+                     "interpret", "tile"),
+)
+def count_candidates(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    lo_s: jnp.ndarray,
+    hi_s: jnp.ndarray,
+    sim: str,
+    tau: float,
+    self_join: bool = False,
+    cutoff: int = 1 << 30,
+    window: bool = True,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    tile: int = _TILE,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Tile-count prepass -> (window counts, candidate counts), int32[GR, GS].
+
+    Counts exactly what :func:`candidate_matrix` intersected with the integer
+    length window (``lo_s``/``hi_s`` per R row, from
+    ``bounds.length_window_int``) would mark true — but without materialising
+    the dense mask.  The resident join sizes its compaction capacity from
+    these counts.  Non-Pallas impls (``ref``/``ref_mxu``/``mxu``) share the
+    pure-jnp oracle; the dense intermediate then lives only on device inside
+    this jit.
+    """
+    nr, w = words_r.shape
+    ns, _ = words_s.shape
+    b = 32 * w
+    impl = resolve_impl(impl, b)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if impl in ("ref", "ref_mxu", "mxu"):
+        return ref.count_candidates_ref(
+            words_r, words_s, len_r, len_s, lo_s, hi_s, sim=sim, tau=tau,
+            self_join=self_join, cutoff=cutoff, window=window,
+            tile_r=tile, tile_s=tile)
+    if impl != "swar":
+        raise ValueError(f"unknown impl {impl!r}")
+    pr = _pad_rows(words_r, tile)
+    ps = _pad_rows(words_s, tile)
+    plr = _pad_rows(len_r.astype(jnp.int32), tile)
+    pls = _pad_rows(len_s.astype(jnp.int32), tile)
+    plo = _pad_rows(lo_s.astype(jnp.int32), tile)
+    phi = _pad_rows(hi_s.astype(jnp.int32), tile)
+    return compaction.count_candidates_pallas(
+        pr, ps, plr, pls, plo, phi, sim=sim, tau=tau, self_join=self_join,
+        cutoff=cutoff, window=window, tile_r=tile, tile_s=tile,
+        interpret=interpret)

@@ -9,8 +9,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import bounds
 from repro.core.bitmap import popcount32, unpack_bits
-from repro.core.constants import COSINE, DICE, JACCARD, OVERLAP
 
 
 def hamming_matrix_ref(words_r: jnp.ndarray, words_s: jnp.ndarray) -> jnp.ndarray:
@@ -25,18 +25,9 @@ def bitplane_hamming_ref(planes_r: jnp.ndarray, planes_s: jnp.ndarray,
     return pc_r[:, None] + pc_s[None, :] - 2 * dot
 
 
-def required_overlap_ref(sim: str, tau: float, lr: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
-    lr = lr.astype(jnp.float32)
-    ls = ls.astype(jnp.float32)
-    if sim == OVERLAP:
-        return jnp.full(jnp.broadcast_shapes(lr.shape, ls.shape), float(tau), jnp.float32)
-    if sim == JACCARD:
-        return (tau / (1.0 + tau)) * (lr + ls)
-    if sim == COSINE:
-        return tau * jnp.sqrt(lr * ls)
-    if sim == DICE:
-        return (tau / 2.0) * (lr + ls)
-    raise ValueError(sim)
+# The Table 1 equivalent-overlap threshold lives in core.bounds; kernels, the
+# ring join and these oracles all share the same float32 helper.
+required_overlap_ref = bounds.required_overlap
 
 
 def candidate_matrix_ref(
@@ -67,3 +58,48 @@ def candidate_matrix_ref(
         gj = jnp.arange(ns)[None, :]
         cand &= gi < gj
     return cand
+
+
+def count_candidates_ref(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    lo_s: jnp.ndarray,
+    hi_s: jnp.ndarray,
+    *,
+    sim: str,
+    tau: float,
+    self_join: bool,
+    cutoff: int = 1 << 30,
+    window: bool = True,
+    tile_r: int = 256,
+    tile_s: int = 256,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tile (window-pair count, candidate count) -> two int32[GR, GS].
+
+    ``lo_s``/``hi_s`` are the integer admissible |s| windows per R row
+    (:func:`repro.core.bounds.length_window_int`).  Tiling matches the Pallas
+    count kernel: row tile ``tile_r``, column tile ``tile_s``, last tiles
+    padded with empty (length-0) rows that never count.
+    """
+    nr = words_r.shape[0]
+    ns = words_s.shape[0]
+    lr = len_r.astype(jnp.int32)[:, None]
+    ls = len_s.astype(jnp.int32)[None, :]
+    win = (lr > 0) & (ls > 0)
+    if window:
+        win &= (ls >= lo_s.astype(jnp.int32)[:, None]) & (ls <= hi_s.astype(jnp.int32)[:, None])
+    if self_join:
+        win &= jnp.arange(nr)[:, None] < jnp.arange(ns)[None, :]
+    cand = candidate_matrix_ref(words_r, words_s, len_r, len_s, sim=sim,
+                                tau=tau, self_join=self_join, cutoff=cutoff) & win
+
+    def tile_sums(m):
+        gr = -(-nr // tile_r)
+        gs = -(-ns // tile_s)
+        p = jnp.zeros((gr * tile_r, gs * tile_s), jnp.int32)
+        p = p.at[:nr, :ns].set(m.astype(jnp.int32))
+        return p.reshape(gr, tile_r, gs, tile_s).sum(axis=(1, 3))
+
+    return tile_sums(win), tile_sums(cand)

@@ -14,7 +14,7 @@ except ModuleNotFoundError:  # container has no pip index — seeded fallback
 
 from repro.core import bitmap as bm
 from repro.core import bounds
-from repro.core.constants import BITMAP_METHODS, PAD_TOKEN
+from repro.core.constants import BITMAP_METHODS, PAD_TOKEN, SIM_FUNCTIONS
 
 _LUT = np.unpackbits(np.arange(256, dtype=np.uint8)[:, None], axis=1).sum(1)
 
@@ -83,3 +83,46 @@ def test_prefix_length_bounds(r, sim, tau):
     n = len(set(r))
     p = int(bounds.prefix_length(sim, tau if sim != "overlap" else max(1, int(tau * n)), n))
     assert 0 <= p <= n
+
+
+def test_required_overlap_roundtrips_all_sim_constants():
+    """Every sim-name constant must be accepted by the shared float32 helper
+    (the single deduplicated copy of the Table 1 formula used by the Pallas
+    kernels, the jnp oracles and the ring join) and agree with the
+    dtype-polymorphic :func:`bounds.equivalent_overlap`."""
+    lr64 = np.array([1, 3, 7, 40, 200], dtype=np.int64)
+    ls64 = np.array([2, 3, 9, 17, 333], dtype=np.int64)
+    lr = jnp.asarray(lr64, jnp.int32)
+    ls = jnp.asarray(ls64, jnp.int32)
+    for sim in SIM_FUNCTIONS:
+        for tau in (0.5, 0.8, 3.0):
+            got = np.asarray(bounds.required_overlap(sim, tau, lr, ls))
+            want = bounds.equivalent_overlap(sim, tau, lr64, ls64)
+            assert got.dtype == np.float32
+            np.testing.assert_allclose(got, want, rtol=1e-6)
+    with pytest.raises(ValueError):
+        bounds.required_overlap("not-a-sim", 0.5, lr, ls)
+
+
+def test_required_overlap_is_the_single_shared_copy():
+    """The kernel oracle alias must be the bounds helper itself — no drifting
+    duplicate formulas (the old `_required_overlap`/`_need` copies)."""
+    from repro.kernels import ref as kref
+    assert kref.required_overlap_ref is bounds.required_overlap
+    from repro.core import join as join_mod
+    from repro.kernels import bitmap_filter as bf_mod
+    assert not hasattr(join_mod, "_need")
+    assert not hasattr(bf_mod, "_required_overlap")
+
+
+@settings(max_examples=40, deadline=None)
+@given(sim=st.sampled_from(["overlap", "jaccard", "cosine", "dice"]),
+       tau=st.floats(0.2, 0.95), lr=st.integers(0, 300), ls=st.integers(0, 300))
+def test_length_window_int_equals_float_window(sim, tau, lr, ls):
+    """ceil/floor integer bounds are exactly the real-valued Table 2 window
+    for integer |s| — the identity the device-resident path relies on."""
+    if sim == "overlap":
+        tau = float(max(1, int(tau * 10)))
+    lo_f, hi_f = bounds.length_bounds(sim, tau, np.float64(max(lr, 1)))
+    lo_i, hi_i = bounds.length_window_int(sim, tau, np.array([max(lr, 1)]))
+    assert ((ls >= lo_f) and (ls <= hi_f)) == ((ls >= lo_i[0]) and (ls <= hi_i[0]))

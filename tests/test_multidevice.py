@@ -155,6 +155,78 @@ print("OVERFLOW FLAGGED OK", int(of.sum()), "steps")
 """))
 
 
+def test_ring_join_driver_exact_across_sims_and_capacities():
+    """The ring_join overflow re-run driver (the escalation that
+    ring_join_sharded's docstring promises): for every similarity function,
+    both an ample and a deliberately tiny per-step capacity must reproduce
+    the naive oracle's pair set exactly — tiny capacities via the dense
+    re-run of flagged (device, step) tiles."""
+    print(_run(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import bitmap as bm, join
+from repro.core.collection import from_lists
+from repro.launch.mesh import make_mesh
+
+rng = np.random.default_rng(11)
+n = 48
+sets = [rng.choice(90, size=rng.integers(1, 13), replace=False).tolist()
+        for _ in range(n)]
+for i in range(0, 12, 3):  # planted duplicates -> non-empty joins + overflow
+    sets[i + 1] = sets[i]
+col = from_lists(sets, pad_to=14)
+mesh = make_mesh((4,), ("data",))
+tok, length = jnp.asarray(col.tokens), jnp.asarray(col.lengths)
+words = bm.generate_bitmaps(tok, length, 64, method="xor")
+saw_overflow = False
+for sim, tau in (("jaccard", 0.7), ("cosine", 0.8), ("dice", 0.75), ("overlap", 4.0)):
+    oracle = join.naive_join(col, sim, tau)
+    assert len(oracle) >= 4, (sim, tau)
+    for cap in (None, 1, 4):
+        pairs, counters, overflow = join.ring_join(
+            tok, length, words, mesh=mesh, axis="data", sim=sim, tau=tau,
+            capacity_per_step=cap, return_stats=True)
+        assert np.array_equal(pairs, oracle), (sim, tau, cap, len(pairs), len(oracle))
+        # verified counters are reconciled with the dense re-runs
+        assert np.asarray(counters)[:, 1].sum() == len(pairs), (sim, tau, cap)
+        if cap is not None:
+            # counter/flag contract: aggregate per-device counters and the
+            # per-step flags must agree.
+            assert np.asarray(overflow).sum() == np.asarray(counters)[:, 2].sum()
+            saw_overflow = saw_overflow or bool(np.asarray(overflow).any())
+assert saw_overflow  # the tiny capacities did exercise the re-run path
+print("RING DRIVER OK")
+"""))
+
+
+def test_ring_join_driver_rs_overflow():
+    print(_run(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import bitmap as bm, join
+from repro.core.collection import from_lists
+from repro.launch.mesh import make_mesh
+
+rng = np.random.default_rng(13)
+sr = [rng.choice(70, size=rng.integers(2, 12), replace=False).tolist() for _ in range(32)]
+ss = [rng.choice(70, size=rng.integers(2, 12), replace=False).tolist() for _ in range(24)]
+for k in range(6):
+    ss[k] = sr[2 * k]
+cr = from_lists(sr, pad_to=12); cs = from_lists(ss, pad_to=12)
+mesh = make_mesh((4,), ("data",))
+tr, lr = jnp.asarray(cr.tokens), jnp.asarray(cr.lengths)
+ts, ls = jnp.asarray(cs.tokens), jnp.asarray(cs.lengths)
+wr = bm.generate_bitmaps(tr, lr, 64, method="xor")
+ws = bm.generate_bitmaps(ts, ls, 64, method="xor")
+oracle = join.naive_join(cr, cs, "jaccard", 0.6)
+assert len(oracle) >= 6
+for cap in (None, 1):
+    got = join.ring_join(tr, lr, wr, tokens_s=ts, lengths_s=ls, words_s=ws,
+                         mesh=mesh, axis="data", sim="jaccard", tau=0.6,
+                         capacity_per_step=cap)
+    assert np.array_equal(got, oracle), (cap, len(got), len(oracle))
+print("RING DRIVER RS OK")
+"""))
+
+
 def test_elastic_restore_different_mesh():
     print(_run(r"""
 import tempfile, numpy as np, jax, jax.numpy as jnp
