@@ -1,0 +1,155 @@
+"""Prepared-collection engine: amortized probe throughput vs rebuild-per-call.
+
+The serving question (ROADMAP north star): R is a corpus that holds still,
+S arrives in batches.  Today's one-shot ``blocked_bitmap_join(col_r, col_s)``
+re-derives the R-side length sort and bitmap words on *every* call; the
+engine (``repro.core.engine.JoinEngine``) prepares R once and streams batches
+through it.  This benchmark measures both shapes on the same workload and
+*asserts* — via the ``PreparedCollection`` build counters — that the second
+and every subsequent probe skips the length sort and bitmap generation
+entirely.
+
+``python -m benchmarks.bench_engine --smoke`` runs the CI gate flavour
+(``scripts/check.sh``): prepare once, probe twice, assert the second probe
+reuses the cached bitmap words and returns oracle-identical pairs.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import JACCARD, JoinEngine, JoinPlanner, prepare
+from repro.core.collection import from_lists
+from repro.core.join import blocked_bitmap_join, naive_join
+
+TAU = 0.8
+B = 128
+
+
+def _corpus_and_batches(n_corpus: int, n_batch: int, k_batches: int,
+                        seed: int = 0):
+    """One corpus + k probe batches in a shared token universe, with planted
+    cross-batch near-duplicates so every probe returns pairs."""
+    rng = np.random.default_rng(seed)
+
+    def draw(n):
+        sizes = np.maximum(rng.poisson(12, size=n), 1)
+        return [np.unique(rng.integers(0, 900, size=2 * sz + 8))[:sz].tolist()
+                for sz in sizes]
+
+    corpus_sets = draw(n_corpus)
+    batch_sets = []
+    for k in range(k_batches):
+        sets = draw(n_batch)
+        for i in range(min(n_batch // 10, n_corpus)):
+            sets[i] = corpus_sets[(k * 37 + i) % n_corpus]
+        batch_sets.append(sets)
+    # One padded width across corpus and batches -> one jit cache for all
+    # probe steps.
+    width = max(len(s) for group in [corpus_sets] + batch_sets for s in group)
+    corpus = from_lists(corpus_sets, pad_to=width)
+    batches = [from_lists(sets, pad_to=width) for sets in batch_sets]
+    return corpus, batches
+
+
+def _assert_amortized(engine: JoinEngine) -> None:
+    builds = engine.prepared.builds
+    assert builds["sort"] == 1, builds
+    assert builds["bitmap"] == 1, builds
+    assert builds["window"] <= 1, builds
+
+
+def run() -> List[Row]:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    n_corpus, n_batch, k = (600, 150, 3) if smoke else (3000, 500, 5)
+    corpus, batches = _corpus_and_batches(n_corpus, n_batch, k)
+    planner = JoinPlanner(b=B, block=2048, naive_cells=0)  # always 'blocked'
+    rows: List[Row] = []
+
+    # --- engine: prepare once, stream batches -----------------------------
+    t0 = time.perf_counter()
+    engine = JoinEngine(corpus, JACCARD, TAU, planner=planner)
+    first_pairs, first_stats = engine.probe(batches[0])
+    cold = time.perf_counter() - t0
+
+    warm_times = []
+    engine_pairs = [first_pairs]
+    for batch in batches[1:] + [batches[0]]:
+        t0 = time.perf_counter()
+        pairs, _stats = engine.probe(batch)
+        warm_times.append(time.perf_counter() - t0)
+        engine_pairs.append(pairs)
+    warm = sorted(warm_times)[len(warm_times) // 2]
+    _assert_amortized(engine)  # probes 2..k never re-sorted or re-hashed R
+
+    # --- rebuild-per-call: today's one-shot driver ------------------------
+    rebuild_times = []
+    for idx, batch in enumerate(batches):
+        t0 = time.perf_counter()
+        pairs = blocked_bitmap_join(corpus, batch, JACCARD, TAU,
+                                    b=B, block=2048)
+        rebuild_times.append(time.perf_counter() - t0)
+        assert np.array_equal(pairs, engine_pairs[idx])
+    rebuild = sorted(rebuild_times)[len(rebuild_times) // 2]
+
+    oracle = naive_join(corpus, batches[0], JACCARD, TAU)
+    assert np.array_equal(first_pairs, oracle)
+
+    rows.append(Row(
+        "engine_probe_cold", cold * 1e6,
+        f"prepare+first_probe pairs={len(first_pairs)} "
+        f"filter_ratio={first_stats.filter_ratio:.4f}",
+        stats=first_stats.to_dict()))
+    rows.append(Row(
+        "engine_probe_warm", warm * 1e6,
+        f"median_of_{len(warm_times)} rebuild_per_call={rebuild*1e6:.0f}us "
+        f"amortized_speedup={rebuild/max(warm, 1e-9):.2f}x "
+        f"builds={engine.prepared.builds}"))
+    rows.append(Row(
+        "engine_rebuild_per_call", rebuild * 1e6,
+        f"one-shot blocked_bitmap_join (re-sorts + regenerates bitmaps)"))
+    return rows
+
+
+def run_engine_smoke() -> List[Row]:
+    """CI gate (``scripts/check.sh``): prepare once, probe twice, assert the
+    second probe reuses the cached bitmap words and matches the oracle."""
+    corpus, batches = _corpus_and_batches(300, 80, 1, seed=7)
+    batch = batches[0]
+    engine = JoinEngine(corpus, JACCARD, TAU,
+                        planner=JoinPlanner(b=B, block=1024, naive_cells=0))
+    prep_batch = prepare(batch)
+    t0 = time.perf_counter()
+    pairs1, _ = engine.probe(prep_batch)
+    t1 = time.perf_counter() - t0
+    builds_after_first = engine.prepared.build_counts()
+    t0 = time.perf_counter()
+    pairs2, stats2 = engine.probe(prep_batch)
+    t2 = time.perf_counter() - t0
+    # The second probe must not rebuild anything on either side...
+    assert engine.prepared.build_counts() == builds_after_first, (
+        builds_after_first, engine.prepared.build_counts())
+    assert engine.prepared.builds["sort"] == 1
+    assert engine.prepared.builds["bitmap"] == 1
+    assert prep_batch.builds["bitmap"] == 1
+    # ...and must return the oracle's exact pair set, like the first.
+    oracle = naive_join(corpus, batch, JACCARD, TAU)
+    assert np.array_equal(pairs1, oracle) and np.array_equal(pairs2, oracle)
+    return [Row("engine_smoke_probe2", t2 * 1e6,
+                f"probe1={t1*1e6:.0f}us pairs={len(pairs2)} "
+                f"builds={engine.prepared.builds} OK",
+                stats=stats2.to_dict())]
+
+
+if __name__ == "__main__":
+    import sys
+
+    fn = run_engine_smoke if "--smoke" in sys.argv[1:] else run
+    print("name,us_per_call,derived")
+    for r in fn():
+        print(r.csv(), flush=True)

@@ -1,6 +1,7 @@
 """Benchmark driver — one module per paper table/figure.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH]
+                                               [--trajectory PATH]
                                                [module-substring ...]
 Prints ``name,us_per_call,derived`` CSV rows.
 
@@ -12,12 +13,19 @@ Prints ``name,us_per_call,derived`` CSV rows.
 ``JoinStats`` dict — counters, filter_ratio, precision, overflow_blocks) to
 PATH as a JSON list, so perf/filter-ratio trajectories can be diffed across
 PRs instead of eyeballing CSV.
+
+``--trajectory PATH`` *appends* one summary entry (timestamp, git revision,
+row list with stats) to the JSON list at PATH — the cross-PR perf
+trajectory.  ``scripts/check.sh`` points it at the repo-root
+``BENCH_PR3.json``, so every gate run extends the history instead of
+overwriting it.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -30,13 +38,55 @@ MODULES = [
     "benchmarks.bench_precision",          # Fig. 11
     "benchmarks.bench_device_join",        # Table 10
     "benchmarks.bench_rs_join",            # R×S vs self-join
+    "benchmarks.bench_engine",             # prepared-vs-rebuild amortization
     "benchmarks.bench_kernels",            # kernel roofline (DESIGN §6)
 ]
 
 SMOKE_MODULES = [
     "benchmarks.bench_expected_bounds",
     "benchmarks.bench_rs_join",
+    "benchmarks.bench_engine",
 ]
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def append_trajectory(path: str, rows, *, smoke: bool) -> int:
+    """Append one run summary to the JSON trajectory list at ``path``.
+
+    The file holds a list of entries ``{ts, rev, smoke, rows}``; a corrupt or
+    non-list file is replaced rather than crashing the gate (the trajectory
+    is observability, not a correctness artifact).  Returns the new length.
+    """
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, list):
+                history = loaded
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "rev": _git_rev(),
+        "smoke": smoke,
+        "rows": [r.to_json() for r in rows],
+    })
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=1)
+    os.replace(tmp, path)
+    return len(history)
 
 
 def main() -> None:
@@ -50,6 +100,13 @@ def main() -> None:
         if i + 1 >= len(argv):
             raise SystemExit("--json needs a path argument")
         json_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    trajectory_path = None
+    if "--trajectory" in argv:
+        i = argv.index("--trajectory")
+        if i + 1 >= len(argv):
+            raise SystemExit("--trajectory needs a path argument")
+        trajectory_path = argv[i + 1]
         argv = argv[:i] + argv[i + 2:]
     filters = [a for a in argv if not a.startswith("-")]
     modules = SMOKE_MODULES if smoke and not filters else MODULES
@@ -72,6 +129,9 @@ def main() -> None:
         with open(json_path, "w") as f:
             json.dump([r.to_json() for r in all_rows], f, indent=1)
         print(f"# wrote {len(all_rows)} rows to {json_path}")
+    if trajectory_path:
+        n = append_trajectory(trajectory_path, all_rows, smoke=smoke)
+        print(f"# appended trajectory entry {n} to {trajectory_path}")
 
 
 if __name__ == "__main__":

@@ -14,10 +14,18 @@ else
     python -m pytest -x -q -m "not slow"
 fi
 
-# Benchmark smoke; --json leaves a machine-readable JoinStats trail so
-# filter-ratio / perf trajectories can be diffed across PRs.
-python -m benchmarks.run --smoke --json "${REPRO_BENCH_JSON:-/tmp/repro_bench_smoke.json}"
+# Benchmark smoke; --json leaves a machine-readable JoinStats trail and
+# --trajectory appends this run's summary to the repo-root perf history
+# (BENCH_PR3.json) so filter-ratio / perf trajectories accumulate across PRs.
+python -m benchmarks.run --smoke \
+    --json "${REPRO_BENCH_JSON:-/tmp/repro_bench_smoke.json}" \
+    --trajectory "${REPRO_BENCH_TRAJECTORY:-BENCH_PR3.json}"
 
 # Compaction-path smoke: the device-resident join must reproduce the host
 # path's pairs exactly on a real R×S workload.
 python -m benchmarks.bench_rs_join --resident
+
+# Engine smoke: prepare a corpus once, probe it twice; the second probe must
+# reuse the cached length sort + bitmap words (asserted via build counters)
+# and return oracle-identical pairs.
+python -m benchmarks.bench_engine --smoke

@@ -8,6 +8,10 @@ Public surface:
 * :mod:`repro.core.expected` — Eq. 4-6 expected bounds, cutoff ω(b, τ).
 * :mod:`repro.core.join` — naive oracle, blocked device join, ring join.
 * :mod:`repro.core.cpu_algos` — faithful AllPairs/PPJoin/GroupJoin/AdaptJoin.
+* :mod:`repro.core.engine` — build-once :class:`PreparedCollection` artifacts
+  and the batched-probe :class:`JoinEngine`.
+* :mod:`repro.core.plan` — :class:`JoinPlanner` resolving workloads into
+  explicit :class:`JoinPlan` configurations.
 """
 
 from repro.core.collection import (
@@ -17,6 +21,14 @@ from repro.core.collection import (
     preprocess,
     preprocess_rs,
 )
+from repro.core.engine import (
+    JoinEngine,
+    PreparedCollection,
+    as_prepared,
+    prepare,
+    prepared_bitmap_filter,
+)
+from repro.core.plan import JoinPlan, JoinPlanner
 from repro.core.constants import (
     BITMAP_COMBINED,
     BITMAP_METHODS,

@@ -110,11 +110,21 @@ def bitmap_next_bits(tokens: jnp.ndarray, lengths: jnp.ndarray, b: int, mix: boo
     return jax.vmap(per_set)(pos, valid)
 
 
+def _validate_width(b: int) -> None:
+    """Reject widths that would silently mis-pack (b <= 0, or bits that do
+    not fill whole uint32 words)."""
+    if not isinstance(b, (int, np.integer)):
+        raise ValueError(f"bitmap width must be an int, got {type(b).__name__}")
+    if b <= 0 or b % 32:
+        raise ValueError(
+            f"bitmap width b={b} must be a positive multiple of 32 "
+            f"(bitmaps are packed into uint32 words)")
+
+
 def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
     """bool[N, b] -> uint32[N, b//32] (little-endian bit order within words)."""
     n, b = bits.shape
-    if b % 32:
-        raise ValueError(f"bitmap size {b} must be a multiple of 32")
+    _validate_width(b)
     w = b // 32
     shaped = bits.reshape(n, w, 32).astype(jnp.uint32)
     weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[None, None, :]
@@ -190,11 +200,19 @@ def generate_bitmaps(
       method: 'set' | 'xor' | 'next' | 'combined'.
       tau_jaccard: required when method == 'combined'.
       packed: return packed uint32[N, b//32] (default) or bool[N, b].
+
+    Raises:
+      ValueError: if ``b`` is not a positive multiple of 32 (widths that
+        would silently mis-pack into uint32 words), or for an unknown method.
     """
+    _validate_width(b)
     if method == BITMAP_COMBINED:
         if tau_jaccard is None:
             raise ValueError("combined method needs tau_jaccard")
         method = choose_method(tau_jaccard, b)
+    if method not in _GENERATORS:
+        raise ValueError(f"unknown bitmap method {method!r}; "
+                         f"one of {sorted(_GENERATORS)} or 'combined'")
     bits = _GENERATORS[method](tokens, lengths, b, mix)
     return pack_bits(bits) if packed else bits
 

@@ -27,6 +27,14 @@ Self-join inputs must be preprocessed with
 ordering across both collections — prefix-filter correctness needs a common
 total order) — both the prefix filter's selectivity and the sorted-index
 length early-out rely on it.
+
+All four algorithms also accept
+:class:`~repro.core.engine.PreparedCollection` inputs: the algorithm bodies
+run over the prepared (length-sorted) view, the ℓ-prefix inverted index comes
+from the prepared cache (built once per ``(sim, tau, ell)``), and the
+returned pairs are remapped to original collection indices.  A ``bitmap=``
+filter passed alongside prepared inputs must be built over the prepared
+order — use :func:`repro.core.engine.prepared_bitmap_filter`.
 """
 
 from __future__ import annotations
@@ -40,6 +48,7 @@ import numpy as np
 from repro.core import bounds, verify
 from repro.core.collection import Collection, split_join_args
 from repro.core.constants import JACCARD
+from repro.core.engine import PreparedCollection
 from repro.core.filters import BitmapFilter
 
 
@@ -56,8 +65,12 @@ def _build_prefix_index(col: Collection, sim: str, tau: float,
     """Inverted index over ℓ-prefixes: token -> [(set_id, position)].
 
     Lists are naturally sorted by set id == by length (collection is
-    size-sorted), which the length filter's early-outs exploit.
+    size-sorted), which the length filter's early-outs exploit.  A
+    :class:`~repro.core.engine.PreparedCollection` answers from its cache
+    (built at most once per ``(sim, tau, ell)``).
     """
+    if isinstance(col, PreparedCollection):
+        return col.prefix_index(sim, tau, ell)
     index: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
     for i in range(col.num_sets):
         n = int(col.lengths[i])
@@ -89,6 +102,44 @@ def _pack_pairs_rs(results: List[Tuple[int, int]]) -> np.ndarray:
     if not results:
         return np.zeros((0, 2), dtype=np.int64)
     return np.asarray(sorted(set(results)), dtype=np.int64)
+
+
+def _prepared_remapper(col, col_s):
+    """Map result pairs from prepared (length-sorted) space back to original
+    collection indices.
+
+    The algorithm bodies run unchanged over a
+    :class:`~repro.core.engine.PreparedCollection` (it duck-types the read
+    surface of ``Collection`` over its sorted view), so their pair indices
+    come out in sorted space; this remaps them through ``order`` and restores
+    the canonical ordering (i < j for self-joins, lexicographic sort).  With
+    plain ``Collection`` inputs it is the identity.
+
+    NOTE: a ``bitmap=`` filter passed alongside prepared inputs must be built
+    over the *prepared* order (see
+    :func:`repro.core.engine.prepared_bitmap_filter`) — index spaces must
+    agree or pruning is incorrect.
+    """
+    order_r = col.order if isinstance(col, PreparedCollection) else None
+    self_join = col_s is None
+    order_s = (order_r if self_join
+               else col_s.order if isinstance(col_s, PreparedCollection)
+               else None)
+    if order_r is None and order_s is None:
+        return lambda pairs: pairs
+
+    def remap(pairs: np.ndarray) -> np.ndarray:
+        if len(pairs) == 0:
+            return pairs
+        gi = order_r[pairs[:, 0]] if order_r is not None else pairs[:, 0]
+        gj = order_s[pairs[:, 1]] if order_s is not None else pairs[:, 1]
+        if self_join:
+            out = np.stack([np.minimum(gi, gj), np.maximum(gi, gj)], axis=1)
+        else:
+            out = np.stack([gi, gj], axis=1)
+        return out[np.lexsort((out[:, 1], out[:, 0]))].astype(np.int64)
+
+    return remap
 
 
 # ---------------------------------------------------------------------------
@@ -147,9 +198,10 @@ def allpairs(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
              stats: Optional[AlgoStats] = None) -> np.ndarray:
     col_s, sim, tau = split_join_args(col_s, sim, tau)
     stats = stats if stats is not None else AlgoStats()
+    remap = _prepared_remapper(col, col_s)
     if col_s is not None:
-        return _allpairs_like_rs(col, col_s, sim, tau, bitmap, stats,
-                                 positional=False)
+        return remap(_allpairs_like_rs(col, col_s, sim, tau, bitmap, stats,
+                                       positional=False))
     index = _build_prefix_index(col, sim, tau)
     lengths = col.lengths
     results: List[Tuple[int, int]] = []
@@ -175,7 +227,7 @@ def allpairs(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
             if _verify_pair(col, r, int(s), sim, tau, stats):
                 results.append((int(s), r))
     stats.results = len(results)
-    return _pack_pairs(results)
+    return remap(_pack_pairs(results))
 
 
 # ---------------------------------------------------------------------------
@@ -187,9 +239,10 @@ def ppjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
            stats: Optional[AlgoStats] = None) -> np.ndarray:
     col_s, sim, tau = split_join_args(col_s, sim, tau)
     stats = stats if stats is not None else AlgoStats()
+    remap = _prepared_remapper(col, col_s)
     if col_s is not None:
-        return _allpairs_like_rs(col, col_s, sim, tau, bitmap, stats,
-                                 positional=True)
+        return remap(_allpairs_like_rs(col, col_s, sim, tau, bitmap, stats,
+                                       positional=True))
     index = _build_prefix_index(col, sim, tau)
     lengths = col.lengths
     results: List[Tuple[int, int]] = []
@@ -223,7 +276,7 @@ def ppjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
             if _verify_pair(col, r, int(s), sim, tau, stats):
                 results.append((int(s), r))
     stats.results = len(results)
-    return _pack_pairs(results)
+    return remap(_pack_pairs(results))
 
 
 # ---------------------------------------------------------------------------
@@ -304,8 +357,9 @@ def groupjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
               stats: Optional[AlgoStats] = None) -> np.ndarray:
     col_s, sim, tau = split_join_args(col_s, sim, tau)
     stats = stats if stats is not None else AlgoStats()
+    remap = _prepared_remapper(col, col_s)
     if col_s is not None:
-        return _groupjoin_rs(col, col_s, sim, tau, bitmap, stats)
+        return remap(_groupjoin_rs(col, col_s, sim, tau, bitmap, stats))
     # Group sets sharing (size, prefix tokens). Filters run once per group
     # representative; the verification stage expands groups to members.
     members, rep = _group_by_size_prefix(col, sim, tau)
@@ -369,7 +423,7 @@ def groupjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
                 if _verify_pair(col, gm[a], int(s), sim, tau, stats):
                     results.append(_ordered(gm[a], int(s)))
     stats.results = len(results)
-    return _pack_pairs(results)
+    return remap(_pack_pairs(results))
 
 
 # ---------------------------------------------------------------------------
@@ -451,8 +505,9 @@ def adaptjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
     """
     col_s, sim, tau = split_join_args(col_s, sim, tau)
     stats = stats if stats is not None else AlgoStats()
+    remap = _prepared_remapper(col, col_s)
     if col_s is not None:
-        return _adaptjoin_rs(col, col_s, sim, tau, bitmap, stats, max_ell)
+        return remap(_adaptjoin_rs(col, col_s, sim, tau, bitmap, stats, max_ell))
     index = _build_prefix_index(col, sim, tau, ell=max_ell)
     lengths = col.lengths
     results: List[Tuple[int, int]] = []
@@ -485,7 +540,7 @@ def adaptjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
             if _verify_pair(col, r, int(s), sim, tau, stats):
                 results.append((int(s), r))
     stats.results = len(results)
-    return _pack_pairs(results)
+    return remap(_pack_pairs(results))
 
 
 ALGORITHMS: Dict[str, Callable] = {

@@ -79,6 +79,7 @@ class BitmapFilter:
         b: int = 64,
         method: str = BITMAP_COMBINED,
         use_cutoff: bool = True,
+        mix: bool = False,
     ) -> "BitmapFilter":
         import jax.numpy as jnp
 
@@ -88,7 +89,8 @@ class BitmapFilter:
         else:
             chosen = method
         words = np.asarray(
-            bm.generate_bitmaps(jnp.asarray(tokens), jnp.asarray(lengths), b, method=chosen)
+            bm.generate_bitmaps(jnp.asarray(tokens), jnp.asarray(lengths), b,
+                                method=chosen, mix=mix)
         )
         cutoff = expected.cutoff_point(chosen, b, float(tau_j)) if use_cutoff else np.iinfo(np.int32).max
         return cls(
@@ -113,6 +115,7 @@ class BitmapFilter:
         b: int = 64,
         method: str = BITMAP_COMBINED,
         use_cutoff: bool = True,
+        mix: bool = False,
     ) -> "BitmapFilter":
         """Cross-collection filter: index side R, probe side S."""
         import jax.numpy as jnp
@@ -122,9 +125,11 @@ class BitmapFilter:
         else:
             chosen = method
         words_r = np.asarray(bm.generate_bitmaps(
-            jnp.asarray(tokens_r), jnp.asarray(lengths_r), b, method=chosen))
+            jnp.asarray(tokens_r), jnp.asarray(lengths_r), b, method=chosen,
+            mix=mix))
         words_s = np.asarray(bm.generate_bitmaps(
-            jnp.asarray(tokens_s), jnp.asarray(lengths_s), b, method=chosen))
+            jnp.asarray(tokens_s), jnp.asarray(lengths_s), b, method=chosen,
+            mix=mix))
         cutoff = expected.cutoff_point(chosen, b, float(tau)) if use_cutoff else np.iinfo(np.int32).max
         return cls(
             words=words_r,

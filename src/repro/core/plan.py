@@ -1,0 +1,199 @@
+"""Join planning: resolve (sim, tau, sizes, device availability) into an
+explicit, inspectable :class:`JoinPlan`.
+
+The paper separates bitmap *construction* (Section 3.2) from per-pair
+*filtering*; the engine layer mirrors that split with a build-once
+:class:`~repro.core.engine.PreparedCollection` artifact and a planner that
+decides — once, up front, in one place — which driver runs a given workload
+and with which knobs.  Every decision the drivers used to make implicitly
+(bitmap method via Algorithm 6, cutoff via Eq. 4-6, block size, compaction
+mode, capacity sizing) is written into the plan so callers can inspect,
+log, serialize and override it.
+
+Driver vocabulary:
+
+* ``"naive"`` — the O(|R|·|S|) oracle; cheapest below a few thousand cells.
+* ``"blocked"`` — the blocked device join (Algorithm 8, TPU-shaped).
+* ``"ring"`` — the multi-device ring sweep (needs a mesh at execution time).
+* ``"allpairs" | "ppjoin" | "groupjoin" | "adaptjoin"`` — the faithful CPU
+  algorithms with the pluggable Bitmap Filter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Tuple
+
+from repro.core import bitmap as bm
+from repro.core import expected
+from repro.core.constants import BITMAP_COMBINED
+
+DEVICE_DRIVERS = ("naive", "blocked", "ring")
+CPU_DRIVERS = ("allpairs", "ppjoin", "groupjoin", "adaptjoin")
+DRIVERS = DEVICE_DRIVERS + CPU_DRIVERS
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinPlan:
+    """A fully-resolved join configuration.
+
+    Immutable and JSON-able; produced by :class:`JoinPlanner` (or built by
+    hand) and executed by :class:`~repro.core.engine.JoinEngine`.  ``reasons``
+    records why each load-bearing choice was made.
+    """
+
+    driver: str
+    sim: str
+    tau: float
+    b: int = 128
+    method: str = BITMAP_COMBINED   # resolved: never 'combined' after planning
+    mix: bool = False
+    block: int = 4096
+    compaction: str = "host"        # 'host' | 'device' (blocked driver only)
+    capacity: Optional[int] = None  # None -> prepass-sized per block pair
+    impl: str = "auto"
+    use_cutoff: bool = True
+    cutoff: int = 1 << 30           # resolved Eq. 4-6 cutoff (informational)
+    reasons: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.driver not in DRIVERS:
+            raise ValueError(f"unknown driver {self.driver!r}; one of {DRIVERS}")
+        if self.compaction not in ("host", "device"):
+            raise ValueError(f"compaction must be 'host' or 'device', "
+                             f"got {self.compaction!r}")
+        if self.b <= 0 or self.b % 32:
+            raise ValueError(f"bitmap width b={self.b} must be a positive "
+                             f"multiple of 32")
+        if self.block <= 0:
+            raise ValueError(f"block size must be positive, got {self.block}")
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["reasons"] = list(self.reasons)
+        return d
+
+    def describe(self) -> str:
+        """Human-readable one-plan report (for logs / notebooks)."""
+        head = (f"JoinPlan[{self.driver}] sim={self.sim} tau={self.tau} "
+                f"b={self.b} method={self.method} mix={self.mix} "
+                f"block={self.block} compaction={self.compaction} "
+                f"capacity={self.capacity} cutoff={self.cutoff}")
+        return "\n".join([head] + [f"  - {r}" for r in self.reasons])
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict())
+
+
+class JoinPlanner:
+    """Resolve workload shape + device availability into a :class:`JoinPlan`.
+
+    Heuristics are deterministic and documented via ``JoinPlan.reasons``:
+
+    * tiny cross products run the ``naive`` oracle (no artifact pays off);
+    * multi-device meshes get the ``ring`` driver;
+    * accelerators get the ``blocked`` driver with device-resident compaction,
+      CPUs get host compaction (``np.nonzero`` on host is the fast path there);
+    * ``prefer="cpu"`` selects a faithful CPU algorithm — AdaptJoin below the
+      Jaccard-scale threshold where its ℓ-prefix schema pays (the paper's
+      low-τ regime), PPJoin otherwise;
+    * bitmap method comes from Algorithm 6 (:func:`repro.core.bitmap.
+      choose_method`), the cutoff from Eq. 4-6.
+    """
+
+    def __init__(self, *, b: int = 128, block: int = 4096,
+                 naive_cells: int = 4096, mix: bool = False,
+                 use_cutoff: bool = True, impl: str = "auto",
+                 adaptjoin_below_tau: float = 0.6):
+        self.b = b
+        self.block = block
+        self.naive_cells = naive_cells
+        self.mix = mix
+        self.use_cutoff = use_cutoff
+        self.impl = impl
+        self.adaptjoin_below_tau = adaptjoin_below_tau
+
+    def plan(self, sim: str, tau: float, n_r: int,
+             n_s: Optional[int] = None, *,
+             prefer: str = "auto",
+             backend: Optional[str] = None,
+             n_devices: Optional[int] = None,
+             b: Optional[int] = None,
+             block: Optional[int] = None) -> JoinPlan:
+        """Resolve a plan for an ``n_r`` × ``n_s`` join (self-join if ``n_s``
+        is omitted).
+
+        ``backend``/``n_devices`` default to the live JAX runtime; pass them
+        explicitly for deterministic planning in tests or offline tooling.
+        ``prefer`` is ``"auto"`` | ``"device"`` | ``"cpu"``.
+        """
+        if prefer not in ("auto", "device", "cpu"):
+            raise ValueError(f"prefer must be auto|device|cpu, got {prefer!r}")
+        if n_r <= 0:
+            raise ValueError(f"n_r must be positive, got {n_r}")
+        if backend is None or n_devices is None:
+            import jax
+            backend = backend or jax.default_backend()
+            n_devices = n_devices if n_devices is not None else jax.device_count()
+        b = b or self.b
+        reasons = []
+
+        cells = n_r * (n_s if n_s is not None else n_r)
+        if prefer != "cpu" and cells <= self.naive_cells:
+            driver = "naive"
+            reasons.append(
+                f"naive: {cells} cells <= naive_cells={self.naive_cells}; "
+                f"the O(N^2) oracle beats building join artifacts")
+        elif prefer == "cpu":
+            if sim != "overlap" and tau < self.adaptjoin_below_tau:
+                driver = "adaptjoin"
+                reasons.append(
+                    f"adaptjoin: prefer=cpu and tau={tau} < "
+                    f"{self.adaptjoin_below_tau} (ℓ-prefix schema pays at low τ)")
+            else:
+                driver = "ppjoin"
+                reasons.append("ppjoin: prefer=cpu (positional filter is the "
+                               "best general-purpose CPU prefix algorithm)")
+        elif n_devices > 1:
+            driver = "ring"
+            reasons.append(f"ring: {n_devices} devices available; R shards "
+                           f"stay resident, S circulates via collective_permute")
+        else:
+            driver = "blocked"
+            reasons.append("blocked: single device; blocked length-sorted "
+                           "walk with fused bitmap-filter tiles")
+
+        on_accelerator = backend in ("tpu", "gpu")
+        compaction = "device" if on_accelerator else "host"
+        reasons.append(
+            f"compaction={compaction}: backend={backend} "
+            + ("(keep candidate lists resident, ship only compacted pairs)"
+               if on_accelerator else
+               "(dense np.nonzero on host is the fast path on CPU)"))
+
+        if block is None:
+            largest = max(n_r, n_s or n_r)
+            block = min(self.block, max(128, _pow2_at_least(largest)))
+        reasons.append(f"block={block}: min(default {self.block}, pow2 cover "
+                       f"of max collection size)")
+
+        if tau <= 0 and sim != "overlap":
+            raise ValueError(f"tau must be positive for sim={sim!r}, got {tau}")
+        method = bm.choose_method(float(tau), b)
+        reasons.append(f"method={method}: Algorithm 6 crossovers at b={b}, "
+                       f"tau={tau}")
+        cutoff = (expected.cutoff_point(method, b, float(tau))
+                  if self.use_cutoff else 1 << 30)
+        reasons.append(f"cutoff={cutoff}: Eq. 4-6 expected bound "
+                       + ("" if self.use_cutoff else "(disabled)"))
+
+        return JoinPlan(
+            driver=driver, sim=sim, tau=float(tau), b=b, method=method,
+            mix=self.mix, block=block, compaction=compaction, capacity=None,
+            impl=self.impl, use_cutoff=self.use_cutoff, cutoff=int(cutoff),
+            reasons=tuple(reasons))

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.collection import Collection, from_lists
 from repro.core.constants import JACCARD
+from repro.core.engine import PreparedCollection, prepare
 from repro.core.join import blocked_bitmap_join, JoinStats
 
 
@@ -62,8 +63,8 @@ class DedupResult:
     stats: JoinStats
 
 
-def dedup_collection(col: Collection, tau: float = 0.8, *, b: int = 128,
-                     block: int = 4096, impl: str = "auto",
+def dedup_collection(col: Collection | PreparedCollection, tau: float = 0.8,
+                     *, b: int = 128, block: int = 4096, impl: str = "auto",
                      compaction: str = "device") -> DedupResult:
     """Exact near-dup removal at Jaccard >= tau. Keeps the smallest index of
     each duplicate cluster (deterministic).
@@ -71,7 +72,10 @@ def dedup_collection(col: Collection, tau: float = 0.8, *, b: int = 128,
     Runs the device-resident join by default: candidate compaction and
     verification stay on the accelerator, so per-block traffic is a small
     compacted pair buffer instead of a dense bool tile — the difference
-    between feasible and not at corpus scale.
+    between feasible and not at corpus scale.  Accepts a
+    :class:`~repro.core.engine.PreparedCollection` to reuse its cached length
+    sort and bitmap words (e.g. when the same corpus is deduped at several
+    thresholds); pairs/keep/drop are always in original indices.
     """
     pairs, stats = blocked_bitmap_join(
         col, JACCARD, tau, b=b, block=block, impl=impl,
@@ -106,7 +110,8 @@ class IncrementalDedupResult:
     stats_rs: JoinStats
 
 
-def dedup_against(corpus: Collection, new: Collection, tau: float = 0.8, *,
+def dedup_against(corpus: Collection | PreparedCollection, new: Collection,
+                  tau: float = 0.8, *,
                   b: int = 128, block: int = 4096, impl: str = "auto",
                   within: bool = True,
                   compaction: str = "device") -> IncrementalDedupResult:
@@ -117,7 +122,16 @@ def dedup_against(corpus: Collection, new: Collection, tau: float = 0.8, *,
     collections must live in one token space (same shingler / tokenizer run).
     Uses the device-resident compaction path by default (see
     :func:`dedup_collection`).
+
+    When streaming many shards against one corpus, pass
+    ``prepare(corpus)`` (a :class:`~repro.core.engine.PreparedCollection`)
+    once and reuse it across calls: the corpus length sort, bitmap words and
+    length windows are then built a single time instead of per shard —
+    exactly the amortization ``benchmarks/bench_engine.py`` measures.
     """
+    if isinstance(new, PreparedCollection):
+        # Survivor sub-collections below index ``new`` by original position.
+        new = new.source
     pairs_rs, stats_rs = blocked_bitmap_join(
         corpus, new, JACCARD, tau, b=b, block=block, impl=impl,
         compaction=compaction, return_stats=True)
@@ -138,6 +152,20 @@ def dedup_against(corpus: Collection, new: Collection, tau: float = 0.8, *,
     return IncrementalDedupResult(
         keep=keep, drop_vs_corpus=dup_vs_corpus, drop_within=drop_within,
         pairs_rs=pairs_rs, stats_rs=stats_rs)
+
+
+def dedup_shards(corpus: Collection | PreparedCollection,
+                 shards: Sequence[Collection], tau: float = 0.8,
+                 **kw) -> List[IncrementalDedupResult]:
+    """Stream many shards against one corpus, preparing the corpus once.
+
+    The corpus-side artifacts (length sort, packed bitmap words, length
+    windows) are built on the first shard and reused for every subsequent
+    one — the serving shape of :class:`repro.core.engine.JoinEngine` applied
+    to incremental dedup.
+    """
+    prep = prepare(corpus)
+    return [dedup_against(prep, shard, tau, **kw) for shard in shards]
 
 
 def dedup_documents_against(corpus_texts: Sequence[str],

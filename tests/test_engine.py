@@ -1,0 +1,422 @@
+"""Prepared-collection engine: build-once artifacts, the planner, and the
+batched probe API.
+
+Covers the contract the engine layer promises:
+
+* a ``PreparedCollection`` builds each artifact (length sort, bitmap words
+  per ``(b, method, mix)``, integer length windows, CPU prefix index) at most
+  once — assertable via its build counters;
+* every driver (blocked host/device, naive, ring, all four CPU algorithms)
+  accepts prepared inputs and returns the exact oracle pair set in original
+  indices, bit-identical to the plain-``Collection`` wrappers;
+* ``JoinPlanner`` resolves workloads into explicit, inspectable plans;
+* ``JoinEngine.probe`` streams batches against one prepared corpus with
+  per-batch ``JoinStats`` and no corpus-side rebuilds.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import cpu_algos, join
+from repro.core.collection import Collection, from_lists, preprocess, preprocess_rs
+from repro.core.engine import (
+    JoinEngine,
+    PreparedCollection,
+    prepare,
+    prepared_bitmap_filter,
+)
+from repro.core.plan import JoinPlan, JoinPlanner
+from repro.data.dedup import dedup_against, dedup_shards
+
+_PAD = 16
+
+
+def _collection(seed: int, n: int = 48, universe: int = 110):
+    rng = np.random.default_rng(seed)
+    sets = [rng.choice(universe, size=rng.integers(1, 13), replace=False).tolist()
+            for _ in range(n)]
+    return from_lists(sets, pad_to=_PAD)
+
+
+def _rs_pair(seed: int, n_r: int = 48, n_s: int = 32):
+    rng = np.random.default_rng(seed)
+    col_r = _collection(seed, n=n_r)
+    sets_s = [rng.choice(110, size=rng.integers(1, 13), replace=False).tolist()
+              for _ in range(n_s)]
+    for k in range(min(6, n_s)):
+        sets_s[k] = list(col_r.row((3 * k) % n_r))
+    return col_r, from_lists(sets_s, pad_to=_PAD)
+
+
+# ---------------------------------------------------------------------------
+# PreparedCollection artifacts
+# ---------------------------------------------------------------------------
+
+def test_prepare_is_idempotent_and_sorts_stably():
+    col = _collection(0)
+    prep = prepare(col)
+    assert prepare(prep) is prep
+    assert np.array_equal(prep.order, np.argsort(col.lengths, kind="stable"))
+    assert np.array_equal(prep.lengths, np.sort(col.lengths, kind="stable"))
+    assert np.array_equal(prep.order[prep.inverse], np.arange(col.num_sets))
+    # duck-typed Collection surface over the sorted view
+    assert prep.num_sets == col.num_sets and prep.max_len == col.max_len
+    assert np.array_equal(prep.row(0), col.row(int(prep.order[0])))
+
+
+def test_bitmap_words_cached_per_key():
+    prep = prepare(_collection(1))
+    w1 = prep.bitmap_words(64, "xor")
+    w2 = prep.bitmap_words(64, "xor")
+    assert w1 is w2
+    assert prep.builds["bitmap"] == 1
+    prep.bitmap_words(64, "set")
+    prep.bitmap_words(32, "xor")
+    prep.bitmap_words(64, "xor", mix=True)  # distinct (b, method, mix) keys
+    assert prep.builds["bitmap"] == 4
+    # 'combined' resolves through Algorithm 6 and shares the resolved key
+    from repro.core.bitmap import choose_method
+    resolved = choose_method(0.9, 64)
+    prep.bitmap_words(64, resolved)     # ensure the resolved key exists
+    n = prep.builds["bitmap"]
+    prep.bitmap_words(64, "combined", tau=0.9)
+    assert prep.builds["bitmap"] == n   # combined hit the resolved key's cache
+    with pytest.raises(ValueError, match="combined"):
+        prep.bitmap_words(64, "combined")
+
+
+def test_window_and_prefix_index_cached():
+    prep = prepare(_collection(2))
+    prep.length_window_int("jaccard", 0.8)
+    prep.length_window_int("jaccard", 0.8)
+    prep.length_window_int("cosine", 0.8)
+    assert prep.builds["window"] == 2
+    i1 = prep.prefix_index("jaccard", 0.8)
+    i2 = prep.prefix_index("jaccard", 0.8)
+    assert i1 is i2
+    prep.prefix_index("jaccard", 0.8, ell=3)
+    assert prep.builds["prefix_index"] == 2
+    lo, hi, _, _ = prep.length_window_int("jaccard", 0.8)
+    from repro.core import bounds
+    elo, ehi = bounds.length_window_int("jaccard", 0.8, prep.lengths)
+    assert np.array_equal(lo, elo) and np.array_equal(hi, ehi)
+
+
+# ---------------------------------------------------------------------------
+# Drivers accept prepared inputs (wrapper parity + oracle exactness)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compaction", ["host", "device"])
+def test_blocked_join_prepared_parity_self(compaction):
+    col = _collection(3)
+    oracle = join.naive_join(col, "jaccard", 0.6)
+    plain, pstats = join.blocked_bitmap_join(
+        col, "jaccard", 0.6, b=32, block=16, compaction=compaction,
+        return_stats=True)
+    prep = prepare(col)
+    got, gstats = join.blocked_bitmap_join(
+        prep, "jaccard", 0.6, b=32, block=16, compaction=compaction,
+        return_stats=True)
+    assert np.array_equal(oracle, plain)
+    assert np.array_equal(oracle, got)
+    assert pstats == gstats  # bit-for-bit counters through the wrapper
+    # the second prepared call rebuilds nothing
+    before = prep.build_counts()
+    again = join.blocked_bitmap_join(
+        prep, "jaccard", 0.6, b=32, block=16, compaction=compaction)
+    assert np.array_equal(oracle, again)
+    assert prep.build_counts() == before
+    assert prep.builds["sort"] == 1 and prep.builds["bitmap"] == 1
+
+
+@pytest.mark.parametrize("compaction", ["host", "device"])
+def test_blocked_join_prepared_parity_rs(compaction):
+    col_r, col_s = _rs_pair(4)
+    oracle = join.naive_join(col_r, col_s, "cosine", 0.7)
+    plain, pstats = join.blocked_bitmap_join(
+        col_r, col_s, "cosine", 0.7, b=32, block=16, compaction=compaction,
+        return_stats=True)
+    pr, ps = prepare(col_r), prepare(col_s)
+    got, gstats = join.blocked_bitmap_join(
+        pr, ps, "cosine", 0.7, b=32, block=16, compaction=compaction,
+        return_stats=True)
+    assert np.array_equal(oracle, plain)
+    assert np.array_equal(oracle, got)
+    assert pstats == gstats
+
+
+def test_same_prepared_object_twice_is_full_rs_not_self_join():
+    """Passing one prepared object as both R and S must mean R×S over the
+    full cross product (diagonal included) — identical to the
+    plain-Collection call — not silently flip to self-join semantics."""
+    col = _collection(19, n=24)
+    prep = prepare(col)
+    oracle = join.naive_join(col, col, "jaccard", 0.6)
+    assert len(oracle) >= col.num_sets  # at least the diagonal matches
+    got = join.blocked_bitmap_join(prep, prep, "jaccard", 0.6, b=32, block=16)
+    assert np.array_equal(oracle, got)
+    from repro.launch.mesh import make_mesh
+    ring = join.ring_join_prepared(prep, prep, mesh=make_mesh((1,), ("data",)),
+                                   axis="data", sim="jaccard", tau=0.6, b=32)
+    assert np.array_equal(oracle, ring)
+
+
+def test_naive_join_accepts_prepared():
+    col_r, col_s = _rs_pair(5)
+    oracle = join.naive_join(col_r, col_s, "jaccard", 0.7)
+    got = join.naive_join(prepare(col_r), prepare(col_s), "jaccard", 0.7)
+    assert np.array_equal(oracle, got)
+    self_oracle = join.naive_join(col_r, "jaccard", 0.7)
+    assert np.array_equal(self_oracle,
+                          join.naive_join(prepare(col_r), "jaccard", 0.7))
+
+
+def test_ring_join_prepared_single_device_mesh():
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    col = preprocess(_collection(6))
+    oracle = join.naive_join(col, "jaccard", 0.7)
+    prep = prepare(col)
+    pairs = join.ring_join_prepared(prep, mesh=mesh, axis="data",
+                                    sim="jaccard", tau=0.7, b=32)
+    assert np.array_equal(oracle, pairs)
+    col_r, col_s = _rs_pair(7)
+    oracle_rs = join.naive_join(col_r, col_s, "jaccard", 0.6)
+    pairs_rs, counters, overflow = join.ring_join_prepared(
+        prepare(col_r), prepare(col_s), mesh=mesh, axis="data",
+        sim="jaccard", tau=0.6, b=32, return_stats=True)
+    assert np.array_equal(oracle_rs, pairs_rs)
+    assert counters[:, 1].sum() == len(pairs_rs)
+
+
+@pytest.mark.parametrize("algo_name", sorted(cpu_algos.ALGORITHMS))
+def test_cpu_algos_accept_prepared(algo_name):
+    algo = cpu_algos.ALGORITHMS[algo_name]
+    col = preprocess(_collection(8, n=40, universe=70))
+    oracle = join.naive_join(col, "jaccard", 0.6)
+    prep = prepare(col)
+    bf = prepared_bitmap_filter(prep, sim="jaccard", tau=0.6, b=64)
+    stats = cpu_algos.AlgoStats()
+    got = algo(prep, "jaccard", 0.6, bitmap=bf, stats=stats)
+    assert np.array_equal(oracle, got), (algo_name, len(oracle), len(got))
+    assert stats.results == len(oracle)
+    # R×S flavour with a cross-collection prepared filter
+    col_r, col_s = preprocess_rs(*_rs_pair(9, n_r=40, n_s=24))
+    pr, ps = prepare(col_r), prepare(col_s)
+    bf_rs = prepared_bitmap_filter(pr, ps, sim="jaccard", tau=0.6, b=64)
+    oracle_rs = join.naive_join(col_r, col_s, "jaccard", 0.6)
+    got_rs = algo(pr, ps, "jaccard", 0.6, bitmap=bf_rs)
+    assert np.array_equal(oracle_rs, got_rs), (algo_name, len(oracle_rs),
+                                               len(got_rs))
+
+
+def test_cpu_prefix_index_reused_across_calls():
+    col = preprocess(_collection(10, n=40, universe=70))
+    prep = prepare(col)
+    cpu_algos.allpairs(prep, "jaccard", 0.7)
+    builds = prep.build_counts()
+    assert builds["prefix_index"] == 1
+    cpu_algos.ppjoin(prep, "jaccard", 0.7)  # same (sim, tau, ell=1) index
+    assert prep.build_counts() == builds
+
+
+# ---------------------------------------------------------------------------
+# JoinPlanner
+# ---------------------------------------------------------------------------
+
+def test_planner_picks_naive_for_tiny_inputs():
+    plan = JoinPlanner().plan("jaccard", 0.8, n_r=20, n_s=20,
+                              backend="cpu", n_devices=1)
+    assert plan.driver == "naive"
+    assert any("naive" in r for r in plan.reasons)
+
+
+def test_planner_blocked_on_single_device_and_ring_on_many():
+    p1 = JoinPlanner().plan("jaccard", 0.8, n_r=5000,
+                            backend="cpu", n_devices=1)
+    assert p1.driver == "blocked" and p1.compaction == "host"
+    p2 = JoinPlanner().plan("jaccard", 0.8, n_r=5000,
+                            backend="tpu", n_devices=8)
+    assert p2.driver == "ring" and p2.compaction == "device"
+
+
+def test_planner_cpu_preference_and_method_resolution():
+    lo = JoinPlanner().plan("jaccard", 0.5, n_r=5000, prefer="cpu",
+                            backend="cpu", n_devices=1)
+    hi = JoinPlanner().plan("jaccard", 0.9, n_r=5000, prefer="cpu",
+                            backend="cpu", n_devices=1)
+    assert lo.driver == "adaptjoin" and hi.driver == "ppjoin"
+    from repro.core.bitmap import choose_method
+    assert hi.method == choose_method(0.9, hi.b)
+    assert hi.method != "combined"
+
+
+def test_plan_is_inspectable_and_validated():
+    plan = JoinPlanner().plan("dice", 0.75, n_r=3000, backend="cpu",
+                              n_devices=1)
+    d = plan.to_dict()
+    assert d["driver"] == plan.driver and isinstance(d["reasons"], list)
+    assert "JoinPlan[" in plan.describe()
+    import json as _json
+    assert _json.loads(plan.to_json())["sim"] == "dice"
+    with pytest.raises(ValueError, match="driver"):
+        JoinPlan(driver="warp", sim="jaccard", tau=0.8)
+    with pytest.raises(ValueError, match="multiple of 32"):
+        JoinPlan(driver="blocked", sim="jaccard", tau=0.8, b=48)
+    with pytest.raises(ValueError, match="compaction"):
+        JoinPlan(driver="blocked", sim="jaccard", tau=0.8, compaction="gpu")
+    with pytest.raises(ValueError, match="prefer"):
+        JoinPlanner().plan("jaccard", 0.8, n_r=10, prefer="quantum",
+                           backend="cpu", n_devices=1)
+
+
+# ---------------------------------------------------------------------------
+# JoinEngine.probe — the serving shape
+# ---------------------------------------------------------------------------
+
+def test_engine_probe_streams_batches_without_rebuilds():
+    corpus, batch_all = _rs_pair(11, n_r=60, n_s=40)
+    # split S into two batches; the engine must reproduce the full R×S oracle
+    half = batch_all.num_sets // 2
+    b1 = Collection(tokens=batch_all.tokens[:half],
+                    lengths=batch_all.lengths[:half])
+    b2 = Collection(tokens=batch_all.tokens[half:],
+                    lengths=batch_all.lengths[half:])
+    engine = JoinEngine(corpus, "jaccard", 0.7,
+                        planner=JoinPlanner(b=32, block=16, naive_cells=0))
+    assert engine.plan.driver == "blocked"
+    p1, s1 = engine.probe(b1)
+    p2, s2 = engine.probe(b2)
+    oracle = join.naive_join(corpus, batch_all, "jaccard", 0.7)
+    merged = np.concatenate([p1, p2 + np.array([0, half])], axis=0)
+    merged = merged[np.lexsort((merged[:, 1], merged[:, 0]))]
+    assert np.array_equal(oracle, merged)
+    for s in (s1, s2):
+        assert s.verified_true <= s.candidates <= s.total_pairs
+    # corpus artifacts built exactly once across both probes
+    assert engine.prepared.builds["sort"] == 1
+    assert engine.prepared.builds["bitmap"] == 1
+    assert engine.probes == 2 and len(engine.history) == 2
+    # a re-probe of a prepared batch rebuilds nothing anywhere
+    pb = prepare(b1)
+    engine.probe(pb)
+    before = (engine.prepared.build_counts(), pb.build_counts())
+    pairs_again = engine.probe(pb, return_stats=False)
+    assert np.array_equal(pairs_again, p1)
+    assert (engine.prepared.build_counts(), pb.build_counts()) == before
+
+
+def test_engine_naive_plan_and_self_join():
+    col = _collection(12, n=20)
+    engine = JoinEngine(col, "jaccard", 0.6)  # tiny -> naive plan
+    assert engine.plan.driver == "naive"
+    pairs, stats = engine.probe(col)
+    assert np.array_equal(pairs, join.naive_join(col, col, "jaccard", 0.6))
+    assert stats.verified_true == len(pairs)
+    self_pairs = engine.self_join()
+    assert np.array_equal(self_pairs, join.naive_join(col, "jaccard", 0.6))
+
+
+def test_engine_naive_plan_guard_escalates_on_large_batches():
+    """An auto-planned 'naive' driver (chosen from the corpus size alone)
+    must not run the dense oracle on a batch that blows past the planner's
+    own cell threshold — it escalates to the blocked driver per probe."""
+    corpus = _collection(20, n=16)
+    engine = JoinEngine(corpus, "jaccard", 0.7,
+                        planner=JoinPlanner(b=32, naive_cells=600))
+    assert engine.plan.driver == "naive"  # 16*16 = 256 <= 600
+    small, _ = engine.probe(_collection(21, n=20))   # 320 cells: stays naive
+    assert not engine.fallbacks
+    _, big_batch = _rs_pair(22, n_r=16, n_s=60)
+    big, _ = engine.probe(big_batch)                 # 960 cells: escalates
+    assert engine.fallbacks and "blocked" in engine.fallbacks[-1]
+    assert np.array_equal(
+        big, join.naive_join(corpus, big_batch, "jaccard", 0.7))
+    # an explicit user-chosen plan is respected, no second-guessing
+    explicit = JoinEngine(corpus, "jaccard", 0.7, plan=engine.plan)
+    explicit.probe(big_batch)
+    assert not explicit.fallbacks
+
+
+def test_engine_ring_stats_report_evaluated_grid():
+    from repro.launch.mesh import make_mesh
+
+    col_r, col_s = _rs_pair(23, n_r=40, n_s=24)
+    plan = JoinPlanner(b=32, naive_cells=0).plan(
+        "jaccard", 0.6, n_r=col_r.num_sets, backend="cpu", n_devices=8)
+    engine = JoinEngine(col_r, "jaccard", 0.6, plan=plan,
+                        mesh=make_mesh((1,), ("data",)), axis="data")
+    pairs, stats = engine.probe(col_s)
+    nnz = int((col_r.lengths > 0).sum()) * int((col_s.lengths > 0).sum())
+    assert stats.total_pairs == nnz
+    assert stats.verified_true == len(pairs)
+    assert stats.verified_true <= stats.candidates <= stats.total_pairs
+    assert 0.0 <= stats.filter_ratio <= 1.0
+
+
+def test_engine_cpu_plan_matches_oracle():
+    col_r, col_s = preprocess_rs(*_rs_pair(13, n_r=40, n_s=24))
+    plan = JoinPlanner(b=64).plan("jaccard", 0.7, n_r=col_r.num_sets,
+                                  prefer="cpu", backend="cpu", n_devices=1)
+    engine = JoinEngine(col_r, "jaccard", 0.7, plan=plan)
+    pairs, stats = engine.probe(col_s)
+    oracle = join.naive_join(col_r, col_s, "jaccard", 0.7)
+    assert np.array_equal(oracle, pairs)
+    assert stats.verified_true == len(oracle)
+    assert stats.candidates <= stats.total_pairs
+
+
+def test_engine_ring_plan_without_mesh_falls_back_to_blocked():
+    col_r, col_s = _rs_pair(14, n_r=40, n_s=24)
+    plan = JoinPlanner(b=32, naive_cells=0).plan(
+        "jaccard", 0.7, n_r=col_r.num_sets, backend="cpu", n_devices=8)
+    assert plan.driver == "ring"
+    engine = JoinEngine(col_r, "jaccard", 0.7, plan=plan)
+    pairs, _ = engine.probe(col_s)
+    assert np.array_equal(pairs, join.naive_join(col_r, col_s, "jaccard", 0.7))
+    assert engine.fallbacks and "blocked" in engine.fallbacks[0]
+
+
+def test_engine_ring_plan_with_mesh():
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    col_r, col_s = _rs_pair(15, n_r=40, n_s=24)
+    plan = JoinPlanner(b=32, naive_cells=0).plan(
+        "jaccard", 0.6, n_r=col_r.num_sets, backend="cpu", n_devices=8)
+    assert plan.driver == "ring"
+    engine = JoinEngine(col_r, "jaccard", 0.6, plan=plan, mesh=mesh,
+                        axis="data")
+    pairs, stats = engine.probe(col_s)
+    assert np.array_equal(pairs, join.naive_join(col_r, col_s, "jaccard", 0.6))
+    assert stats.verified_true == len(pairs)
+    assert not engine.fallbacks
+
+
+# ---------------------------------------------------------------------------
+# Dedup pipeline reuses one prepared corpus across shards
+# ---------------------------------------------------------------------------
+
+def test_dedup_against_prepared_corpus_matches_plain():
+    corpus, shard = _rs_pair(16, n_r=50, n_s=30)
+    plain = dedup_against(corpus, shard, 0.8, b=32, block=16,
+                          compaction="host")
+    prep = prepare(corpus)
+    got = dedup_against(prep, shard, 0.8, b=32, block=16, compaction="host")
+    assert np.array_equal(plain.keep, got.keep)
+    assert np.array_equal(plain.pairs_rs, got.pairs_rs)
+
+
+def test_dedup_shards_prepares_corpus_once():
+    corpus, s1 = _rs_pair(17, n_r=50, n_s=20)
+    _, s2 = _rs_pair(18, n_r=50, n_s=20)
+    prep = prepare(corpus)
+    results = dedup_shards(prep, [s1, s2], 0.8, b=32, block=16,
+                           compaction="host", within=False)
+    assert len(results) == 2
+    assert prep.builds["sort"] == 1 and prep.builds["bitmap"] == 1
+    for res, shard in zip(results, (s1, s2)):
+        ref = dedup_against(corpus, shard, 0.8, b=32, block=16,
+                            compaction="host", within=False)
+        assert np.array_equal(res.keep, ref.keep)
