@@ -12,6 +12,13 @@ entirely.
 ``python -m benchmarks.bench_engine --smoke`` runs the CI gate flavour
 (``scripts/check.sh``): prepare once, probe twice, assert the second probe
 reuses the cached bitmap words and returns oracle-identical pairs.
+``--indexed-smoke`` is the indexed-driver twin: prepare once, probe twice
+through an ``"indexed"`` plan, assert the postings-CSR cache was built
+exactly once (build counters) and both probes match the oracle.
+
+``run()`` additionally measures indexed-vs-blocked on one skewed self-join
+(both rows carry their ``JoinStats``, so the trajectory JSON records the
+candidate funnel of each driver side by side).
 """
 
 from __future__ import annotations
@@ -26,6 +33,7 @@ from benchmarks.common import Row
 from repro.core import JACCARD, JoinEngine, JoinPlanner, prepare
 from repro.core.collection import from_lists
 from repro.core.join import blocked_bitmap_join, naive_join
+from repro.core.plan import JoinPlan
 
 TAU = 0.8
 B = 128
@@ -113,6 +121,45 @@ def run() -> List[Row]:
     rows.append(Row(
         "engine_rebuild_per_call", rebuild * 1e6,
         f"one-shot blocked_bitmap_join (re-sorts + regenerates bitmaps)"))
+    rows.extend(_indexed_vs_blocked(smoke))
+    return rows
+
+
+def _indexed_vs_blocked(smoke: bool) -> List[Row]:
+    """Indexed vs blocked on one skewed self-join: same exact pair set,
+    candidate funnels recorded side by side in the trajectory JSON."""
+    from repro.data.collections import skewed_collection, with_duplicates
+    from repro.index import indexed_bitmap_join
+
+    n = 1500 if smoke else 6000
+    col = with_duplicates(  # planted clusters -> non-trivial pair equality
+        skewed_collection(n_sets=n, avg_size=10, n_tokens=40_000, seed=3),
+        n_clusters=n // 50, cluster_size=3, jaccard=0.9, seed=4)
+
+    t0 = time.perf_counter()
+    bpairs, bstats = blocked_bitmap_join(col, JACCARD, TAU, b=B, block=2048,
+                                         return_stats=True)
+    t_blocked = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ipairs, istats = indexed_bitmap_join(col, JACCARD, TAU, b=B,
+                                         probe_block=2048, return_stats=True)
+    t_indexed = time.perf_counter() - t0
+    assert np.array_equal(bpairs, ipairs)
+
+    cells_ratio = (istats.candidates_generated
+                   / max(bstats.candidates_generated, 1))
+    rows = [
+        Row("engine_blocked_selfjoin", t_blocked * 1e6,
+            f"n={n} pairs={len(bpairs)} "
+            f"bitmap_cells={bstats.candidates_generated}",
+            stats=bstats.to_dict()),
+        Row("engine_indexed_selfjoin", t_indexed * 1e6,
+            f"n={n} pairs={len(ipairs)} "
+            f"bitmap_cells={istats.candidates_generated} "
+            f"cells_vs_blocked={cells_ratio:.4f} "
+            f"expanded={istats.postings_expanded}",
+            stats=istats.to_dict()),
+    ]
     return rows
 
 
@@ -146,10 +193,56 @@ def run_engine_smoke() -> List[Row]:
                 stats=stats2.to_dict())]
 
 
+def run_indexed_smoke() -> List[Row]:
+    """CI gate (``scripts/check.sh``): the indexed driver's engine contract.
+
+    Prepare a corpus once, probe the same prepared batch twice through an
+    ``"indexed"`` plan; the second probe must reuse the cached postings-CSR
+    index, bitmap words and length sort (asserted via build counters) and
+    both probes must return the exact oracle pair set.
+    """
+    corpus, batches = _corpus_and_batches(400, 100, 1, seed=11)
+    batch = batches[0]
+    plan = JoinPlan(driver="indexed", sim=JACCARD, tau=TAU, b=B, block=64)
+    engine = JoinEngine(corpus, JACCARD, TAU, plan=plan)
+    prep_batch = prepare(batch)
+    t0 = time.perf_counter()
+    pairs1, _ = engine.probe(prep_batch)
+    t1 = time.perf_counter() - t0
+    builds_after_first = engine.prepared.build_counts()
+    assert builds_after_first["postings"] == 1, builds_after_first
+    t0 = time.perf_counter()
+    pairs2, stats2 = engine.probe(prep_batch)
+    t2 = time.perf_counter() - t0
+    # The second probe must not rebuild anything on either side...
+    assert engine.prepared.build_counts() == builds_after_first, (
+        builds_after_first, engine.prepared.build_counts())
+    assert engine.prepared.builds["sort"] == 1
+    assert engine.prepared.builds["bitmap"] == 1
+    assert engine.prepared.builds["postings"] == 1
+    assert prep_batch.builds["bitmap"] == 1
+    assert prep_batch.builds["postings"] == 0  # index side is the corpus only
+    # ...and must return the oracle's exact pair set, like the first.
+    oracle = naive_join(corpus, batch, JACCARD, TAU)
+    assert np.array_equal(pairs1, oracle) and np.array_equal(pairs2, oracle)
+    assert (stats2.verified_true <= stats2.candidates
+            <= stats2.candidates_generated == stats2.total_pairs)
+    return [Row("indexed_smoke_probe2", t2 * 1e6,
+                f"probe1={t1*1e6:.0f}us pairs={len(pairs2)} "
+                f"builds={engine.prepared.builds} OK",
+                stats=stats2.to_dict())]
+
+
 if __name__ == "__main__":
     import sys
 
-    fn = run_engine_smoke if "--smoke" in sys.argv[1:] else run
+    argv = sys.argv[1:]
+    if "--indexed-smoke" in argv:
+        fn = run_indexed_smoke
+    elif "--smoke" in argv:
+        fn = run_engine_smoke
+    else:
+        fn = run
     print("name,us_per_call,derived")
     for r in fn():
         print(r.csv(), flush=True)

@@ -1,7 +1,7 @@
 """Benchmark driver — one module per paper table/figure.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH]
-                                               [--trajectory PATH]
+                                               [--trajectory[=PATH] [PATH]]
                                                [module-substring ...]
 Prints ``name,us_per_call,derived`` CSV rows.
 
@@ -14,11 +14,15 @@ Prints ``name,us_per_call,derived`` CSV rows.
 PATH as a JSON list, so perf/filter-ratio trajectories can be diffed across
 PRs instead of eyeballing CSV.
 
-``--trajectory PATH`` *appends* one summary entry (timestamp, git revision,
-row list with stats) to the JSON list at PATH — the cross-PR perf
-trajectory.  ``scripts/check.sh`` points it at the repo-root
-``BENCH_PR3.json``, so every gate run extends the history instead of
-overwriting it.
+``--trajectory [PATH]`` *appends* one summary entry (timestamp, git
+revision, row list with stats) to the JSON list at PATH — the cross-PR perf
+trajectory.  The output path is a parameter (``--trajectory=PATH`` or a
+following non-flag argument); bare ``--trajectory`` defaults to the
+repo-root ``BENCH_PR4.json``.  ``scripts/check.sh`` passes the path
+explicitly (overridable via ``REPRO_BENCH_TRAJECTORY``), so every gate run
+extends the history instead of overwriting it.  When using the bare form
+together with module filters, put the filters first — the token right
+after ``--trajectory`` is taken as the path unless it starts with ``-``.
 """
 
 from __future__ import annotations
@@ -28,6 +32,9 @@ import os
 import subprocess
 import sys
 import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_TRAJECTORY = os.path.join(_REPO_ROOT, "BENCH_PR4.json")
 
 MODULES = [
     "benchmarks.bench_expected_bounds",    # Fig. 5 / Eq. 4-6
@@ -102,12 +109,19 @@ def main() -> None:
         json_path = argv[i + 1]
         argv = argv[:i] + argv[i + 2:]
     trajectory_path = None
+    for a in argv:
+        if a.startswith("--trajectory="):
+            trajectory_path = a.split("=", 1)[1] or DEFAULT_TRAJECTORY
+            argv = [x for x in argv if x != a]
+            break
     if "--trajectory" in argv:
         i = argv.index("--trajectory")
-        if i + 1 >= len(argv):
-            raise SystemExit("--trajectory needs a path argument")
-        trajectory_path = argv[i + 1]
-        argv = argv[:i] + argv[i + 2:]
+        if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
+            trajectory_path = argv[i + 1]
+            argv = argv[:i] + argv[i + 2:]
+        else:
+            trajectory_path = DEFAULT_TRAJECTORY
+            argv = argv[:i] + argv[i + 1:]
     filters = [a for a in argv if not a.startswith("-")]
     modules = SMOKE_MODULES if smoke and not filters else MODULES
     if smoke:

@@ -16,10 +16,11 @@ fi
 
 # Benchmark smoke; --json leaves a machine-readable JoinStats trail and
 # --trajectory appends this run's summary to the repo-root perf history
-# (BENCH_PR3.json) so filter-ratio / perf trajectories accumulate across PRs.
+# (BENCH_PR4.json by default, parameterized via REPRO_BENCH_TRAJECTORY) so
+# filter-ratio / perf trajectories accumulate across PRs.
 python -m benchmarks.run --smoke \
     --json "${REPRO_BENCH_JSON:-/tmp/repro_bench_smoke.json}" \
-    --trajectory "${REPRO_BENCH_TRAJECTORY:-BENCH_PR3.json}"
+    --trajectory "${REPRO_BENCH_TRAJECTORY:-BENCH_PR4.json}"
 
 # Compaction-path smoke: the device-resident join must reproduce the host
 # path's pairs exactly on a real R×S workload.
@@ -29,3 +30,8 @@ python -m benchmarks.bench_rs_join --resident
 # reuse the cached length sort + bitmap words (asserted via build counters)
 # and return oracle-identical pairs.
 python -m benchmarks.bench_engine --smoke
+
+# Indexed-driver smoke: same contract through an "indexed" plan — the second
+# probe must reuse the cached postings-CSR index (builds["postings"] == 1)
+# and both probes must match the oracle exactly.
+python -m benchmarks.bench_engine --indexed-smoke

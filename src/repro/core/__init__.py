@@ -12,6 +12,9 @@ Public surface:
   and the batched-probe :class:`JoinEngine`.
 * :mod:`repro.core.plan` — :class:`JoinPlanner` resolving workloads into
   explicit :class:`JoinPlan` configurations.
+
+The device-resident inverted prefix-index subsystem (CSR postings + the
+``"indexed"`` sub-quadratic driver) lives in :mod:`repro.index`.
 """
 
 from repro.core.collection import (

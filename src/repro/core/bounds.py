@@ -8,6 +8,8 @@ scalars and jnp arrays (all ops are elementwise).
 
 from __future__ import annotations
 
+import functools
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -50,6 +52,76 @@ def equivalent_overlap(sim: str, tau: float, len_r, len_s):
     raise ValueError(f"unknown similarity {sim!r}")
 
 
+def min_overlap_int(sim: str, tau: float, len_r, len_s):
+    """Smallest *integer* overlap the oracle accepts for (|r|, |s|).
+
+    ``o >= equivalent_overlap(...)`` with integer ``o`` is exactly
+    ``o >= ceil(equivalent_overlap(...))`` — this is that ceiling, computed
+    in the same float64 expression the oracle compares against, so every
+    verification path that consumes it decides membership bit-identically
+    to :func:`repro.core.join.naive_join`.
+    """
+    need = equivalent_overlap(sim, tau, np.asarray(len_r, dtype=np.int64),
+                              np.asarray(len_s, dtype=np.int64))
+    return np.ceil(need).astype(np.int64)
+
+
+@functools.lru_cache(maxsize=64)
+def min_overlap_table(sim: str, tau: float, lr_max: int, ls_max: int):
+    """Device-gatherable :func:`min_overlap_int` table (int32, host-built).
+
+    Devices run float32 (x64 off), where re-deriving the Table 1 threshold
+    lands a few ulps off the oracle's float64 value and flips membership of
+    exactly-at-threshold pairs.  The thresholds only depend on a small
+    integer key — ``|r| + |s|`` for Jaccard/Dice, ``|r| * |s|`` for Cosine,
+    nothing for Overlap — so each verification site gathers the exact
+    integer threshold instead of recomputing it.  Cached per
+    ``(sim, tau, lr_max, ls_max)`` with a bounded LRU (cosine tables can be
+    hundreds of MB near the key-space guard; an unbounded cache would pin
+    one per tau across a sweep).  Index with :func:`min_overlap_gather`;
+    device code should go through the cached device twin
+    ``repro.core.verify.min_overlap_table_dev`` rather than re-uploading.
+    """
+    if sim == COSINE:
+        # Cosine thresholds key on |r|·|s|: the table is O(lr_max·ls_max).
+        # Guard the key space so absurd padded widths fail loudly here
+        # instead of exhausting memory (and so the gather index always
+        # fits int32 — a wrapped index would gather garbage thresholds).
+        if lr_max * ls_max + 1 > (1 << 27):
+            raise ValueError(
+                f"cosine min-overlap table key space {lr_max}x{ls_max} "
+                f"exceeds 2^27 entries; shard or narrow the collections")
+        key = np.arange(lr_max * ls_max + 1, dtype=np.int64)
+        need = tau * (key * 1.0) ** 0.5
+    elif sim == OVERLAP:
+        key = np.arange(lr_max + ls_max + 1, dtype=np.int64)
+        need = tau + 0.0 * key
+    elif sim == JACCARD:
+        key = np.arange(lr_max + ls_max + 1, dtype=np.int64)
+        need = tau / (1.0 + tau) * key
+    elif sim == DICE:
+        key = np.arange(lr_max + ls_max + 1, dtype=np.int64)
+        need = tau * key / 2.0
+    else:
+        raise ValueError(f"unknown similarity {sim!r}")
+    tab = np.maximum(np.ceil(need), 0.0)
+    return np.minimum(tab, np.iinfo(np.int32).max).astype(np.int32)
+
+
+def min_overlap_gather(sim: str, table, len_r, len_s):
+    """Gather the integer acceptance threshold per pair (jnp-traceable).
+
+    ``table`` comes from :func:`min_overlap_table` (as a device array);
+    ``len_r``/``len_s`` are int arrays.  Comparing an exact integer overlap
+    ``o >= min_overlap_gather(...)`` reproduces the float64 oracle's
+    verdict on device with pure int32 arithmetic.
+    """
+    len_r = jnp.asarray(len_r).astype(jnp.int32)
+    len_s = jnp.asarray(len_s).astype(jnp.int32)
+    idx = len_r * len_s if sim == COSINE else len_r + len_s
+    return table[idx]
+
+
 def required_overlap(sim: str, tau: float, lr, ls):
     """float32, jnp-native twin of :func:`equivalent_overlap`.
 
@@ -58,6 +130,12 @@ def required_overlap(sim: str, tau: float, lr, ls):
     and the pure-jnp kernel oracles all call this one function, so every
     device path rounds the same way.  (:func:`equivalent_overlap` stays the
     dtype-polymorphic host/numpy version; both compute the Table 1 formulas.)
+
+    float32 rounding can land a few ulps *above* the float64 oracle value,
+    so **pruning** decisions (the only thing a float threshold may decide)
+    must compare against :func:`required_overlap_safe`, never this raw
+    value; **acceptance** decisions use the integer
+    :func:`min_overlap_table` machinery instead.
     """
     lr = jnp.asarray(lr).astype(jnp.float32)
     ls = jnp.asarray(ls).astype(jnp.float32)
@@ -70,6 +148,22 @@ def required_overlap(sim: str, tau: float, lr, ls):
     if sim == DICE:
         return (tau / 2.0) * (lr + ls)
     raise ValueError(f"unknown similarity {sim!r}")
+
+
+def required_overlap_safe(sim: str, tau: float, lr, ls):
+    """Prune-side lower bound on the float64 equivalent overlap.
+
+    The float32 :func:`required_overlap` value can land a few ulps *above*
+    the oracle's float64 threshold; a filter that prunes on ``bound <
+    need_f32`` would then drop exactly-at-threshold true pairs.  Relaxing
+    the threshold by a ≤1e-6 relative margin makes every float32 prune a
+    strict subset of the float64 one — the slack only ever admits a handful
+    of extra boundary candidates, which exact (integer) verification
+    removes.  Use this in every upper-bound *prune* comparison; acceptance
+    goes through :func:`min_overlap_table`.
+    """
+    need = required_overlap(sim, tau, lr, ls)
+    return need * (1.0 - 1e-6) - 1e-6
 
 
 # ---------------------------------------------------------------------------
@@ -96,18 +190,42 @@ def length_bounds(sim: str, tau: float, len_r):
 
 
 def length_window_int(sim: str, tau: float, len_r):
-    """Integer-exact admissible |s| window per |r|: (ceil(lower), floor(upper)).
+    """Integer-exact admissible partner-size window per |r|.
 
-    For integer |s| the real-valued Table 2 window ``lower <= |s| <= upper``
-    is exactly ``ceil(lower) <= |s| <= floor(upper)``.  Computing the integer
-    bounds once (in float64, on host) lets device code apply the window with
-    pure int32 comparisons — bit-identical to the host path's float
-    comparison, with only O(block) scalars shipped instead of a dense mask.
+    This is the single source of truth for the length filter: every host
+    and device path (``core/filters``, the blocked driver's block
+    early-outs, the CPU algorithms' sorted-list breaks, the postings-index
+    narrowing) derives its window from here, so none of them can drift
+    from the others — or from verification.
+
+    The float Table 2 bounds are only the starting guess: ``ceil``/``floor``
+    of e.g. ``5 * 0.8 == 4.0000000000000002`` would exclude a partner that
+    exact verification accepts (the window algebra is symmetric in exact
+    arithmetic, but float rounding breaks the symmetry on boundaries).
+    Each side is therefore corrected against the *need* test itself — a
+    partner size ``m`` is admissible iff the best achievable overlap
+    ``min(|r|, m)`` reaches :func:`equivalent_overlap` — which is precisely
+    the test verification applies.  Float drift is sub-ulp, so the exact
+    integer boundary is always within one of the float one.
     """
-    lo, hi = length_bounds(sim, tau, np.asarray(len_r, dtype=np.float64))
-    lo_i = np.maximum(np.ceil(lo), 0.0)
-    int32_max = float(np.iinfo(np.int32).max)
-    hi_i = np.where(np.isfinite(hi), np.floor(hi), int32_max)
+    n = np.asarray(len_r, dtype=np.int64)
+    lo, hi = length_bounds(sim, tau, n.astype(np.float64))
+    int32_max = np.int64(np.iinfo(np.int32).max)
+    lo_i = np.maximum(np.ceil(lo), 0.0).astype(np.int64)
+    lo_i = np.minimum(lo_i, int32_max)
+    hi_i = np.where(np.isfinite(hi), np.floor(hi), float(int32_max))
+    hi_i = np.minimum(hi_i, float(int32_max)).astype(np.int64)
+
+    def admissible(m):
+        ok = (m >= 1) & (n >= 1)
+        need = equivalent_overlap(sim, tau, n, m)
+        return ok & (np.minimum(n, m) >= need)
+
+    # Widen (never shrink — a loose window only admits candidates that
+    # verification re-checks) each side by the at-most-one integer the
+    # float guess can be off.
+    lo_i = np.where(admissible(lo_i - 1), lo_i - 1, lo_i)
+    hi_i = np.where(admissible(hi_i + 1), hi_i + 1, hi_i)
     return (np.minimum(lo_i, int32_max).astype(np.int32),
             np.minimum(hi_i, int32_max).astype(np.int32))
 
@@ -117,19 +235,29 @@ def length_window_int(sim: str, tau: float, len_r):
 # ---------------------------------------------------------------------------
 
 def prefix_length(sim: str, tau: float, n):
-    """Prefix size for a set of size ``n`` (1-overlap prefix schema)."""
-    n = np.asarray(n)
-    if sim == OVERLAP:
-        p = n - tau + 1
-    elif sim == JACCARD:
-        p = np.floor((1.0 - tau) * n) + 1
-    elif sim == COSINE:
-        p = np.floor((1.0 - tau * tau) * n) + 1
-    elif sim == DICE:
-        p = np.floor((1.0 - tau / (2.0 - tau)) * n) + 1
-    else:
+    """Prefix size for a set of size ``n`` (1-overlap prefix schema).
+
+    Derived from the oracle's own acceptance test instead of the raw Table 2
+    float algebra: the minimal overlap any oracle-accepted partner can have
+    is ``o_min = ceil(equivalent_overlap(n, lo))`` at the smallest
+    admissible partner size ``lo`` (the need is nondecreasing in the partner
+    size), and the pigeonhole prefix is ``n - o_min + 1``.  In exact
+    arithmetic this equals the Table 2 closed forms (e.g. Jaccard
+    ``floor((1 - tau) n) + 1``); computed via floats the closed forms drift
+    on boundaries — ``floor((1 - 0.8) * 5) + 1 == 1`` instead of 2 — and a
+    too-short prefix silently loses exactly-at-threshold pairs.  Because
+    ``ceil`` is applied to the *same* float64 need that verification
+    compares against, the result is the true minimal oracle-acceptable
+    integer overlap, no rounding slack needed.
+    """
+    n_arr = np.asarray(n, dtype=np.int64)
+    if sim not in (OVERLAP, JACCARD, COSINE, DICE):
         raise ValueError(f"unknown similarity {sim!r}")
-    return np.minimum(np.maximum(p, 0), n).astype(np.int64)
+    lo, _hi = length_window_int(sim, tau, np.maximum(n_arr, 1))
+    o_min_f = equivalent_overlap(sim, tau, n_arr, np.maximum(lo.astype(np.int64), 1))
+    o_min = np.maximum(np.ceil(o_min_f), 1.0)
+    p = n_arr - o_min + 1
+    return np.minimum(np.maximum(p, 0), n_arr).astype(np.int64)
 
 
 def prefix_length_ell(sim: str, tau: float, n, ell: int):
@@ -161,3 +289,18 @@ def positional_upper_bound(len_r, len_s, pos_r, pos_s):
     the overlap can be at most 1 + min(remaining suffix lengths).
     """
     return 1 + np.minimum(len_r - pos_r - 1, len_s - pos_s - 1)
+
+
+def positional_upper_bound_int(len_r, len_s, pos_r, pos_s):
+    """int32, jnp-native twin of :func:`positional_upper_bound`.
+
+    Same relationship as :func:`required_overlap` to
+    :func:`equivalent_overlap`: this is the copy the device kernels trace
+    (``np.minimum`` would force a host transfer under jit), computing the
+    identical Section 2.3.3 bound.
+    """
+    len_r = jnp.asarray(len_r).astype(jnp.int32)
+    len_s = jnp.asarray(len_s).astype(jnp.int32)
+    pos_r = jnp.asarray(pos_r).astype(jnp.int32)
+    pos_s = jnp.asarray(pos_s).astype(jnp.int32)
+    return 1 + jnp.minimum(len_r - pos_r - 1, len_s - pos_s - 1)

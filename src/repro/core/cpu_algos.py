@@ -40,6 +40,7 @@ order — use :func:`repro.core.engine.prepared_bitmap_filter`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import defaultdict
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -74,16 +75,42 @@ def _build_prefix_index(col: Collection, sim: str, tau: float,
     index: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
     for i in range(col.num_sets):
         n = int(col.lengths[i])
-        p = int(bounds.prefix_length_ell(sim, tau, n, ell))
+        p = _prefix_len(sim, tau, n, ell)
         for pos in range(p):
             index[int(col.tokens[i, pos])].append((i, pos))
     return index
 
 
+
+@functools.lru_cache(maxsize=None)
+def _int_window(sim: str, tau: float, n: int) -> Tuple[int, int]:
+    """Scalar integer length window (single source of truth:
+    :func:`repro.core.bounds.length_window_int` — the raw float bounds can
+    exclude boundary partners that exact verification accepts).  Cached:
+    the drift-corrected window costs ~10 numpy temporaries per call and
+    sits in every probe loop; (sim, tau, n) keys repeat heavily."""
+    lo, hi = bounds.length_window_int(sim, tau, n)
+    return int(lo), int(hi)
+
+
+@functools.lru_cache(maxsize=None)
+def _prefix_len(sim: str, tau: float, n: int, ell: int = 1) -> int:
+    """Cached scalar ℓ-prefix length (same caching rationale as
+    :func:`_int_window`; :func:`repro.core.bounds.prefix_length` now routes
+    through the corrected window and is no longer a two-flop closed form)."""
+    return int(bounds.prefix_length_ell(sim, tau, n, ell))
+
+
+@functools.lru_cache(maxsize=None)
+def _min_overlap(sim: str, tau: float, lr: int, ls: int) -> int:
+    """Cached scalar minimal oracle-accepted overlap (integer-exact
+    acceptance, identical to ``o >= equivalent_overlap`` for integer o)."""
+    return int(bounds.min_overlap_int(sim, tau, lr, ls))
+
 def _verify_pair(col: Collection, r: int, s: int, sim: str, tau: float,
                  stats: AlgoStats) -> bool:
     stats.verified += 1
-    need = float(bounds.equivalent_overlap(sim, tau, int(col.lengths[r]), int(col.lengths[s])))
+    need = _min_overlap(sim, tau, int(col.lengths[r]), int(col.lengths[s]))
     o = verify.overlap_early_terminate(col.row(r), col.row(s), need)
     return o >= need
 
@@ -91,8 +118,7 @@ def _verify_pair(col: Collection, r: int, s: int, sim: str, tau: float,
 def _verify_pair_rs(col_r: Collection, col_s: Collection, r: int, s: int,
                     sim: str, tau: float, stats: AlgoStats) -> bool:
     stats.verified += 1
-    need = float(bounds.equivalent_overlap(
-        sim, tau, int(col_r.lengths[r]), int(col_s.lengths[s])))
+    need = _min_overlap(sim, tau, int(col_r.lengths[r]), int(col_s.lengths[s]))
     o = verify.overlap_early_terminate(col_r.row(r), col_s.row(s), need)
     return o >= need
 
@@ -151,8 +177,8 @@ def _rs_probe_candidates(index, col_r: Collection, col_s: Collection, s: int,
     """Candidate R ids for probe set ``s`` (shared prefix token + length
     window; optional positional filter at the first match)."""
     ls = int(col_s.lengths[s])
-    p = int(bounds.prefix_length(sim, tau, ls))
-    lo, hi = bounds.length_bounds(sim, tau, ls)
+    p = _prefix_len(sim, tau, ls)
+    lo, hi = _int_window(sim, tau, ls)
     seen: set[int] = set()
     for pos in range(p):
         for r, rpos in index[int(col_s.tokens[s, pos])]:
@@ -207,8 +233,8 @@ def allpairs(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
     results: List[Tuple[int, int]] = []
     for r in range(col.num_sets):
         lr = int(lengths[r])
-        p = int(bounds.prefix_length(sim, tau, lr))
-        lo, _ = bounds.length_bounds(sim, tau, lr)
+        p = _prefix_len(sim, tau, lr)
+        lo, _ = _int_window(sim, tau, lr)
         seen: set[int] = set()
         for pos in range(p):
             for s, _spos in index[int(col.tokens[r, pos])]:
@@ -248,8 +274,8 @@ def ppjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
     results: List[Tuple[int, int]] = []
     for r in range(col.num_sets):
         lr = int(lengths[r])
-        p = int(bounds.prefix_length(sim, tau, lr))
-        lo, _ = bounds.length_bounds(sim, tau, lr)
+        p = _prefix_len(sim, tau, lr)
+        lo, _ = _int_window(sim, tau, lr)
         seen: set[int] = set()
         for pos in range(p):
             for s, spos in index[int(col.tokens[r, pos])]:
@@ -290,7 +316,7 @@ def _group_by_size_prefix(col: Collection, sim: str, tau: float):
     rep: List[int] = []
     for i in range(col.num_sets):
         n = int(col.lengths[i])
-        p = int(bounds.prefix_length(sim, tau, n))
+        p = _prefix_len(sim, tau, n)
         key = (n, tuple(int(t) for t in col.tokens[i, :p]))
         g = group_of.get(key)
         if g is None:
@@ -316,15 +342,15 @@ def _groupjoin_rs(col_r: Collection, col_s: Collection, sim: str, tau: float,
 
     index: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
     for g, row in enumerate(grows):
-        p = int(bounds.prefix_length(sim, tau, len(row)))
+        p = _prefix_len(sim, tau, len(row))
         for pos in range(p):
             index[int(row[pos])].append((g, pos))
 
     results: List[Tuple[int, int]] = []
     for s in range(col_s.num_sets):
         ls = int(col_s.lengths[s])
-        p = int(bounds.prefix_length(sim, tau, ls))
-        lo, hi = bounds.length_bounds(sim, tau, ls)
+        p = _prefix_len(sim, tau, ls)
+        lo, hi = _int_window(sim, tau, ls)
         seen: set[int] = set()
         for pos in range(p):
             for g, gpos in index[int(col_s.tokens[s, pos])]:
@@ -368,15 +394,15 @@ def groupjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
 
     index: Dict[int, List[Tuple[int, int]]] = defaultdict(list)
     for g, row in enumerate(gcol_rows):
-        p = int(bounds.prefix_length(sim, tau, len(row)))
+        p = _prefix_len(sim, tau, len(row))
         for pos in range(p):
             index[int(row[pos])].append((g, pos))
 
     results: List[Tuple[int, int]] = []
     for g, row in enumerate(gcol_rows):
         lg = int(glen[g])
-        p = int(bounds.prefix_length(sim, tau, lg))
-        lo, _ = bounds.length_bounds(sim, tau, lg)
+        p = _prefix_len(sim, tau, lg)
+        lo, _ = _int_window(sim, tau, lg)
         seen: set[int] = set()
         for pos in range(p):
             for h, hpos in index[int(row[pos])]:
@@ -441,7 +467,7 @@ def _adapt_select_ell(match_count: Dict[int, int], probe_cost: int,
     equivalent overlap (= n - prefix_length(n) + 1) — without the cap, small
     sets with o_req < ℓ lose true pairs.
     """
-    o_min = max(int(n - bounds.prefix_length(sim, tau, n) + 1), 1)
+    o_min = max(n - _prefix_len(sim, tau, n) + 1, 1)
     max_ell = min(max_ell, o_min)
     cand_at = []
     for l in range(1, max_ell + 1):
@@ -464,9 +490,9 @@ def _adaptjoin_rs(col_r: Collection, col_s: Collection, sim: str, tau: float,
     results: List[Tuple[int, int]] = []
     for s in range(col_s.num_sets):
         ls = int(col_s.lengths[s])
-        lo, hi = bounds.length_bounds(sim, tau, ls)
+        lo, hi = _int_window(sim, tau, ls)
         match_count: Dict[int, int] = defaultdict(int)
-        plen = int(bounds.prefix_length_ell(sim, tau, ls, max_ell))
+        plen = _prefix_len(sim, tau, ls, max_ell)
         for pos in range(plen):
             for r, _rpos in index[int(col_s.tokens[s, pos])]:
                 lr = int(col_r.lengths[r])
@@ -513,10 +539,10 @@ def adaptjoin(col: Collection, col_s=None, sim: str = JACCARD, tau: float = 0.8,
     results: List[Tuple[int, int]] = []
     for r in range(col.num_sets):
         lr = int(lengths[r])
-        lo, _ = bounds.length_bounds(sim, tau, lr)
+        lo, _ = _int_window(sim, tau, lr)
         # Count prefix-token matches per probed set for each ℓ level.
         match_count: Dict[int, int] = defaultdict(int)
-        plen = [int(bounds.prefix_length_ell(sim, tau, lr, l)) for l in range(1, max_ell + 1)]
+        plen = [_prefix_len(sim, tau, lr, l) for l in range(1, max_ell + 1)]
         # Probe the widest prefix once; candidates at level ℓ are those with
         # match_count >= ℓ inside the level's prefix window.
         for pos in range(plen[-1]):

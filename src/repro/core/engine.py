@@ -17,7 +17,9 @@ on each call.  This module makes the build a first-class, reusable artifact:
 * :class:`JoinEngine` — the serving shape: prepare R once, stream batches of
   S through :meth:`JoinEngine.probe`, each batch returning pairs plus a
   per-batch :class:`~repro.core.join.JoinStats`.  The driver and its knobs
-  come from an explicit :class:`~repro.core.plan.JoinPlan`.
+  come from an explicit :class:`~repro.core.plan.JoinPlan`; executable
+  drivers are naive / blocked / ring / indexed (the :mod:`repro.index`
+  postings-CSR candidate generator) / the four CPU algorithms.
 
 ``PreparedCollection`` duck-types the read surface of ``Collection``
 (``tokens`` / ``lengths`` / ``num_sets`` / ``max_len`` / ``row``) **over the
@@ -61,12 +63,14 @@ class PreparedCollection:
         self.tokens = source.tokens[order]    # length-sorted view (numpy)
         self.lengths = source.lengths[order]
         self.builds: Dict[str, int] = {
-            "sort": 1, "bitmap": 0, "window": 0, "prefix_index": 0}
+            "sort": 1, "bitmap": 0, "window": 0, "prefix_index": 0,
+            "postings": 0}
         self._device: Optional[Tuple] = None          # (tokens, lengths) jnp
         self._words: Dict[Tuple[int, str, bool], object] = {}
         self._words_np: Dict[Tuple[int, str, bool], np.ndarray] = {}
         self._windows: Dict[Tuple[str, float], Tuple] = {}
         self._prefix: Dict[Tuple[str, float, int], dict] = {}
+        self._postings: Dict[Tuple[str, float, int], object] = {}
         self._sorted_collection: Optional[Collection] = None
 
     # -- Collection duck-typing (over the length-sorted view) ---------------
@@ -153,8 +157,20 @@ class PreparedCollection:
             self.builds["prefix_index"] += 1
         return self._prefix[key]
 
+    def postings(self, sim: str, tau: float, ell: int = 1):
+        """Cached CSR ℓ-prefix postings index over the sorted view (the
+        ``"indexed"`` driver's build artifact — the device twin of
+        :meth:`prefix_index`), built at most once per ``(sim, tau, ell)``."""
+        key = (sim, float(tau), int(ell))
+        if key not in self._postings:
+            from repro.index.postings import build_postings
+            self._postings[key] = build_postings(self, sim, tau, ell=ell)
+            self.builds["postings"] += 1
+        return self._postings[key]
+
     def build_counts(self) -> Dict[str, int]:
-        """A copy of the build counters (sort/bitmap/window/prefix_index)."""
+        """A copy of the build counters
+        (sort/bitmap/window/prefix_index/postings)."""
         return dict(self.builds)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -302,7 +318,8 @@ class JoinEngine:
             pairs = join_mod.naive_join(self.prepared, batch, self.sim, self.tau)
             n = len(pairs)
             stats = join_mod.JoinStats(total_pairs=n, candidates=n,
-                                       verified_true=n)
+                                       verified_true=n,
+                                       candidates_generated=n)
             return pairs, stats
 
         if driver == "blocked":
@@ -314,6 +331,15 @@ class JoinEngine:
                 return_stats=True)
 
         prep_s = None if batch is None else prepare(batch)
+        if driver == "indexed":
+            from repro.index.candidates import indexed_join_prepared
+            return indexed_join_prepared(
+                self.prepared, prep_s, sim=self.sim, tau=self.tau,
+                b=plan.b, method=plan.method, mix=plan.mix, ell=plan.ell,
+                probe_block=plan.block, impl=plan.impl,
+                use_cutoff=plan.use_cutoff, capacity=plan.capacity,
+                return_stats=True)
+
         if driver == "ring":
             pairs, counters, _overflow = join_mod.ring_join_prepared(
                 self.prepared, prep_s, mesh=self.mesh, axis=self.axis,
@@ -332,7 +358,8 @@ class JoinEngine:
             stats = join_mod.JoinStats(
                 total_pairs=total,
                 candidates=int(counters[:, 0].sum()),
-                verified_true=len(pairs))
+                verified_true=len(pairs),
+                candidates_generated=total)
             return pairs, stats
 
         if driver in CPU_DRIVERS:
@@ -347,7 +374,8 @@ class JoinEngine:
             stats = join_mod.JoinStats(
                 total_pairs=astats.candidates,
                 candidates=astats.candidates - astats.bitmap_pruned,
-                verified_true=astats.results)
+                verified_true=astats.results,
+                candidates_generated=astats.candidates)
             return pairs, stats
 
         raise ValueError(f"unknown driver {driver!r}")  # pragma: no cover

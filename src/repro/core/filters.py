@@ -18,13 +18,24 @@ from repro.core.constants import BITMAP_COMBINED
 
 
 def length_window(sim: str, tau: float, len_r) -> tuple[np.ndarray, np.ndarray]:
-    """Inclusive (lo, hi) real-valued |s| window for the length filter."""
-    return bounds.length_bounds(sim, tau, len_r)
+    """Inclusive integer (lo, hi) admissible |s| window for the length filter.
+
+    Routed through :func:`repro.core.bounds.length_window_int` — the single
+    source of truth the device drivers use — so the host path can never
+    drift from the integer-exact device path.  For integer |s| the window is
+    identical to the real-valued Table 2 bounds (property-tested in
+    ``tests/test_bounds_property.py``).
+    """
+    return bounds.length_window_int(sim, tau, len_r)
 
 
 def length_filter_mask(sim: str, tau: float, len_r, len_s):
-    """True where the pair *survives* the length filter (elementwise)."""
-    lo, hi = bounds.length_bounds(sim, tau, len_r)
+    """True where the pair *survives* the length filter (elementwise).
+
+    Same integer-exact window as :func:`length_window` (and therefore the
+    same test every device kernel applies).
+    """
+    lo, hi = bounds.length_window_int(sim, tau, len_r)
     return (len_s >= lo) & (len_s <= hi)
 
 

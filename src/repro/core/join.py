@@ -17,6 +17,11 @@ Three tiers, mirroring the paper's structure:
   whose candidate list overflowed.  Used by the dedup pipeline and the
   dry-run.
 
+A fourth driver family lives in :mod:`repro.index`:
+``indexed_bitmap_join`` / ``indexed_join_prepared`` generate candidates
+from a CSR ℓ-prefix inverted index instead of walking the grid — the only
+driver whose work scales with candidate count rather than |R|·|S|.
+
 Every driver accepts plain :class:`~repro.core.collection.Collection` inputs
 (prepared internally — the historical one-shot shape) or build-once
 :class:`~repro.core.engine.PreparedCollection` artifacts whose cached length
@@ -106,14 +111,27 @@ def _overlap_matrix(tokens_r: jnp.ndarray, tokens_s: jnp.ndarray) -> jnp.ndarray
 
 @dataclasses.dataclass
 class JoinStats:
-    """Observability counters (paper Tables 9-10 are derived from these)."""
+    """Observability counters (paper Tables 9-10 are derived from these).
 
-    total_pairs: int = 0          # pairs inside length-filter windows
-    blocks_total: int = 0
-    blocks_skipped: int = 0       # block pairs pruned by the length filter
+    ``total_pairs`` is always the number of cells the bitmap filter's
+    verdict was actually *consumed* on: window-surviving grid cells for the
+    grid drivers (``naive``/``blocked``/``ring``), index-generated deduped
+    candidates for the ``indexed`` driver — so ``filter_ratio`` measures the
+    bitmap's pruning over its real input for every driver.  The candidate
+    funnel is reported explicitly by ``candidates_generated`` (==
+    ``total_pairs``) → ``candidates`` (after the bitmap) →
+    ``verified_true``; ``postings_expanded`` additionally records the
+    indexed driver's pre-dedup postings volume (0 for grid drivers).
+    """
+
+    total_pairs: int = 0          # pairs the bitmap verdict is consumed on
+    blocks_total: int = 0         # block pairs / probe chunks walked
+    blocks_skipped: int = 0       # pruned by the length filter / empty chunks
     candidates: int = 0           # pairs surviving the bitmap filter
     verified_true: int = 0        # final result size
-    overflow_blocks: int = 0      # device-compaction tiles escalated to dense
+    overflow_blocks: int = 0      # tiles/chunks escalated to the dense path
+    candidates_generated: int = 0  # pre-bitmap candidate pairs (the funnel top)
+    postings_expanded: int = 0    # indexed driver: pre-dedup postings entries
 
     @property
     def filter_ratio(self) -> float:
@@ -153,7 +171,7 @@ def _bucket_capacity(n: int, floor: int = 128) -> int:
 )
 def _resident_block_step(
     tokens_r, lengths_r, words_r, tokens_s, lengths_s, words_s,
-    lo_s, hi_s, r0, s0,
+    lo_s, hi_s, need_tab, r0, s0,
     *, sim: str, tau: float, cap: int, diag: bool, cutoff: int, impl: str,
     use_bitmap: bool = True,
 ):
@@ -188,7 +206,10 @@ def _resident_block_step(
     ii, jj = jnp.nonzero(cand, size=cap, fill_value=0)
     slot_ok = jnp.arange(cap) < n_cand
     o = verify.pairwise_overlap(tokens_r[ii], tokens_s[jj])
-    need = bounds.equivalent_overlap(sim, tau, lengths_r[ii], lengths_s[jj])
+    # Integer-exact acceptance (min_overlap_table): bit-identical to the
+    # f64 oracle — f32 thresholds may only ever *prune*, never accept.
+    need = bounds.min_overlap_gather(sim, need_tab, lengths_r[ii],
+                                     lengths_s[jj])
     ok = slot_ok & (o >= need)
     n_ok = jnp.sum(ok, dtype=jnp.int32)
     vi = jnp.nonzero(ok, size=cap, fill_value=0)[0]
@@ -356,6 +377,8 @@ def blocked_bitmap_join_prepared(
         # Cached integer windows for every sorted row (built at most once per
         # (sim, tau) over this prepared collection; block rows slice it).
         _, _, full_lo, full_hi = prep_r.length_window_int(sim, tau)
+        need_tab = verify.min_overlap_table_dev(
+            sim, float(tau), prep_r.max_len, prep_s.max_len)
 
     for bi in range(nb_r):
         r0, r1 = bi * block, min((bi + 1) * block, nr)
@@ -363,9 +386,12 @@ def blocked_bitmap_join_prepared(
         max_lr = int(np_len_r[r1 - 1])
         # Admissible |s| window for the whole R block: the length bounds are
         # nondecreasing in |r|, so the block-wide window is
-        # [lo(min |r|), hi(max |r|)].
-        lo_r0, _ = bounds.length_bounds(sim, tau, max(min_lr, 1))
-        _, hi_r1 = bounds.length_bounds(sim, tau, max(max_lr, 1))
+        # [lo(min |r|), hi(max |r|)] — integer-exact via length_window_int,
+        # the same single source of truth as the per-pair window (the raw
+        # float bounds can exclude boundary partners the verifier accepts).
+        blk_lo, blk_hi = bounds.length_window_int(
+            sim, tau, np.array([max(min_lr, 1), max(max_lr, 1)]))
+        lo_r0, hi_r1 = int(blk_lo[0]), int(blk_hi[1])
         for bj in range(bi if self_join else 0, nb_s):
             s0, s1 = bj * block, min((bj + 1) * block, ns)
             stats.blocks_total += 1
@@ -421,7 +447,7 @@ def blocked_bitmap_join_prepared(
             pairs_d, n_win_d, n_cand_d, n_ok_d, ovf = _resident_block_step(
                 tokens_r[r0:r1], lengths_r[r0:r1], words_r[r0:r1],
                 tokens_s[s0:s1], lengths_s[s0:s1], words_s[s0:s1],
-                win_lo, win_hi, jnp.int32(r0), jnp.int32(s0),
+                win_lo, win_hi, need_tab, jnp.int32(r0), jnp.int32(s0),
                 sim=sim, tau=float(tau), cap=cap, diag=diag,
                 cutoff=int(cutoff), impl=impl, use_bitmap=use_bitmap)
             if capacity is not None:
@@ -458,6 +484,10 @@ def blocked_bitmap_join_prepared(
         pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
     else:
         pairs = np.zeros((0, 2), dtype=np.int64)
+    # Grid driver: the bitmap verdict is consumed on every window-surviving
+    # cell, so the funnel top equals the windowed grid (set identically on
+    # both compaction paths — the stats stay bit-for-bit comparable).
+    stats.candidates_generated = stats.total_pairs
     if return_stats:
         return pairs, stats
     return pairs
@@ -544,8 +574,12 @@ def ring_join_sharded(
     cap = capacity_per_step or max(8 * max(shard_r, shard_s), 128)
 
     spec = P(axes)
+    # Integer acceptance thresholds, replicated to every device (f32 math
+    # may only prune; membership is decided by this host-built table).
+    need_tab = verify.min_overlap_table_dev(
+        sim, float(tau), int(tokens.shape[1]), int(tokens_s.shape[1]))
 
-    def local(tok, length, word, s_tok0, s_len0, s_word0):
+    def local(tok, length, word, s_tok0, s_len0, s_word0, ntab):
         my = jax.lax.axis_index(axis_name)
         gi = my * shard_r + jnp.arange(shard_r, dtype=jnp.int32)
 
@@ -564,7 +598,7 @@ def ring_join_sharded(
             ii, jj = jnp.nonzero(cand, size=cap, fill_value=0)
             slot_valid = jnp.arange(cap) < n_cand
             ok = verify.pairwise_overlap(tok[ii], s_tok[jj])
-            need = bounds.equivalent_overlap(sim, tau, length[ii], s_len[jj])
+            need = bounds.min_overlap_gather(sim, ntab, length[ii], s_len[jj])
             ok_mask = slot_valid & (ok >= need)
             out_pairs = jnp.stack([ii + my * shard_r,
                                    jj + s_dev * shard_s], axis=1).astype(jnp.int32)
@@ -587,11 +621,11 @@ def ring_join_sharded(
     fn = shard_map(
         local,
         mesh=mesh,
-        in_specs=(spec,) * 6,
+        in_specs=(spec,) * 6 + (P(),),
         out_specs=(P(axes),) * 4,
         check_rep=False,
     )
-    return fn(tokens, lengths, words, tokens_s, lengths_s, words_s)
+    return fn(tokens, lengths, words, tokens_s, lengths_s, words_s, need_tab)
 
 
 def ring_join(

@@ -15,6 +15,8 @@ Driver vocabulary:
 * ``"naive"`` — the O(|R|·|S|) oracle; cheapest below a few thousand cells.
 * ``"blocked"`` — the blocked device join (Algorithm 8, TPU-shaped).
 * ``"ring"`` — the multi-device ring sweep (needs a mesh at execution time).
+* ``"indexed"`` — CSR prefix-index candidate generation
+  (:mod:`repro.index`); work scales with candidate count, not |R|·|S|.
 * ``"allpairs" | "ppjoin" | "groupjoin" | "adaptjoin"`` — the faithful CPU
   algorithms with the pluggable Bitmap Filter.
 """
@@ -27,9 +29,9 @@ from typing import Optional, Tuple
 
 from repro.core import bitmap as bm
 from repro.core import expected
-from repro.core.constants import BITMAP_COMBINED
+from repro.core.constants import BITMAP_COMBINED, OVERLAP
 
-DEVICE_DRIVERS = ("naive", "blocked", "ring")
+DEVICE_DRIVERS = ("naive", "blocked", "ring", "indexed")
 CPU_DRIVERS = ("allpairs", "ppjoin", "groupjoin", "adaptjoin")
 DRIVERS = DEVICE_DRIVERS + CPU_DRIVERS
 
@@ -53,12 +55,13 @@ class JoinPlan:
     b: int = 128
     method: str = BITMAP_COMBINED   # resolved: never 'combined' after planning
     mix: bool = False
-    block: int = 4096
+    block: int = 4096               # block size / indexed probe-chunk size
     compaction: str = "host"        # 'host' | 'device' (blocked driver only)
     capacity: Optional[int] = None  # None -> prepass-sized per block pair
     impl: str = "auto"
     use_cutoff: bool = True
     cutoff: int = 1 << 30           # resolved Eq. 4-6 cutoff (informational)
+    ell: int = 1                    # indexed driver: ℓ-prefix index schema
     reasons: Tuple[str, ...] = ()
 
     def __post_init__(self):
@@ -72,6 +75,8 @@ class JoinPlan:
                              f"multiple of 32")
         if self.block <= 0:
             raise ValueError(f"block size must be positive, got {self.block}")
+        if self.ell < 1:
+            raise ValueError(f"ell must be >= 1, got {self.ell}")
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -83,7 +88,8 @@ class JoinPlan:
         head = (f"JoinPlan[{self.driver}] sim={self.sim} tau={self.tau} "
                 f"b={self.b} method={self.method} mix={self.mix} "
                 f"block={self.block} compaction={self.compaction} "
-                f"capacity={self.capacity} cutoff={self.cutoff}")
+                f"capacity={self.capacity} cutoff={self.cutoff} "
+                f"ell={self.ell}")
         return "\n".join([head] + [f"  - {r}" for r in self.reasons])
 
     def to_json(self) -> str:
@@ -97,8 +103,14 @@ class JoinPlanner:
 
     * tiny cross products run the ``naive`` oracle (no artifact pays off);
     * multi-device meshes get the ``ring`` driver;
-    * accelerators get the ``blocked`` driver with device-resident compaction,
-      CPUs get host compaction (``np.nonzero`` on host is the fast path there);
+    * single-device workloads whose grid exceeds ``indexed_cells`` at a
+      threshold high enough for selective prefixes (``tau >=
+      indexed_min_tau``, normalised similarities only) get the ``indexed``
+      driver — candidate generation from the CSR prefix index instead of
+      the quadratic grid;
+    * everything else gets the ``blocked`` driver; accelerators use
+      device-resident compaction, CPUs host compaction (``np.nonzero`` on
+      host is the fast path there);
     * ``prefer="cpu"`` selects a faithful CPU algorithm — AdaptJoin below the
       Jaccard-scale threshold where its ℓ-prefix schema pays (the paper's
       low-τ regime), PPJoin otherwise;
@@ -109,7 +121,9 @@ class JoinPlanner:
     def __init__(self, *, b: int = 128, block: int = 4096,
                  naive_cells: int = 4096, mix: bool = False,
                  use_cutoff: bool = True, impl: str = "auto",
-                 adaptjoin_below_tau: float = 0.6):
+                 adaptjoin_below_tau: float = 0.6,
+                 indexed_cells: int = 1 << 25,
+                 indexed_min_tau: float = 0.6):
         self.b = b
         self.block = block
         self.naive_cells = naive_cells
@@ -117,6 +131,8 @@ class JoinPlanner:
         self.use_cutoff = use_cutoff
         self.impl = impl
         self.adaptjoin_below_tau = adaptjoin_below_tau
+        self.indexed_cells = indexed_cells
+        self.indexed_min_tau = indexed_min_tau
 
     def plan(self, sim: str, tau: float, n_r: int,
              n_s: Optional[int] = None, *,
@@ -163,6 +179,15 @@ class JoinPlanner:
             driver = "ring"
             reasons.append(f"ring: {n_devices} devices available; R shards "
                            f"stay resident, S circulates via collective_permute")
+        elif (sim != OVERLAP and tau >= self.indexed_min_tau
+              and cells > self.indexed_cells):
+            driver = "indexed"
+            reasons.append(
+                f"indexed: {cells} cells > indexed_cells="
+                f"{self.indexed_cells} and tau={tau} >= "
+                f"{self.indexed_min_tau} (selective prefixes); CSR "
+                f"prefix-index candidate generation scales with candidates, "
+                f"not |R|x|S|")
         else:
             driver = "blocked"
             reasons.append("blocked: single device; blocked length-sorted "

@@ -40,7 +40,25 @@ def overlap_many(tokens: jnp.ndarray, idx_r: jnp.ndarray, idx_s: jnp.ndarray) ->
     return pairwise_overlap(tokens[idx_r], tokens[idx_s])
 
 
+@functools.lru_cache(maxsize=64)
+def min_overlap_table_dev(sim: str, tau: float, lmax_r: int, lmax_s: int):
+    """Device twin of ``bounds.min_overlap_table`` — cached (bounded LRU)
+    so repeated verify/probe calls — one per block pair in the blocked
+    host path, one per probe in the serving shape — do not re-upload the
+    same table.  Shared by every driver's verification site."""
+    return jnp.asarray(bounds.min_overlap_table(sim, tau, lmax_r, lmax_s))
+
+
+_min_overlap_table_dev = min_overlap_table_dev  # internal alias
+
+
 @functools.partial(jax.jit, static_argnames=("sim",))
+def _verify_pairs_jit(tokens, lengths, idx_r, idx_s, table, sim):
+    o = overlap_many(tokens, idx_r, idx_s)
+    need = bounds.min_overlap_gather(sim, table, lengths[idx_r], lengths[idx_s])
+    return o >= need
+
+
 def verify_pairs(
     tokens: jnp.ndarray,
     lengths: jnp.ndarray,
@@ -49,13 +67,30 @@ def verify_pairs(
     sim: str,
     tau: float,
 ) -> jnp.ndarray:
-    """bool[K] — whether each candidate pair is truly similar."""
-    o = overlap_many(tokens, idx_r, idx_s)
-    need = bounds.equivalent_overlap(sim, tau, lengths[idx_r], lengths[idx_s])
-    return o >= need
+    """bool[K] — whether each candidate pair is truly similar.
+
+    Acceptance is decided by comparing the exact integer overlap against
+    the host-built integer :func:`repro.core.bounds.min_overlap_table` —
+    never by re-deriving the Table 1 threshold in device float32, whose
+    rounding lands a few ulps off the oracle's float64 value and flips
+    membership of exactly-at-threshold pairs (e.g. |r| = 28 ⊂ |s| = 35 at
+    Jaccard 0.8).  Every driver therefore agrees with ``naive_join``
+    bit-for-bit.
+    """
+    lmax = int(tokens.shape[1])
+    tab = _min_overlap_table_dev(sim, float(tau), lmax, lmax)
+    return _verify_pairs_jit(tokens, lengths, idx_r, idx_s, tab, sim)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
+def _verify_pairs_rs_jit(tokens_r, lengths_r, tokens_s, lengths_s,
+                         idx_r, idx_s, table, sim):
+    o = pairwise_overlap(tokens_r[idx_r], tokens_s[idx_s])
+    need = bounds.min_overlap_gather(sim, table, lengths_r[idx_r],
+                                     lengths_s[idx_s])
+    return o >= need
+
+
 def verify_pairs_rs(
     tokens_r: jnp.ndarray,
     lengths_r: jnp.ndarray,
@@ -66,10 +101,12 @@ def verify_pairs_rs(
     sim: str,
     tau: float,
 ) -> jnp.ndarray:
-    """RS-join variant of :func:`verify_pairs`."""
-    o = pairwise_overlap(tokens_r[idx_r], tokens_s[idx_s])
-    need = bounds.equivalent_overlap(sim, tau, lengths_r[idx_r], lengths_s[idx_s])
-    return o >= need
+    """RS-join variant of :func:`verify_pairs` (same integer-exact
+    acceptance table)."""
+    tab = _min_overlap_table_dev(sim, float(tau), int(tokens_r.shape[1]),
+                                 int(tokens_s.shape[1]))
+    return _verify_pairs_rs_jit(tokens_r, lengths_r, tokens_s, lengths_s,
+                                idx_r, idx_s, tab, sim)
 
 
 # ---------------------------------------------------------------------------

@@ -3,6 +3,7 @@ bitmap-join dedup stage, checkpointable LM loader."""
 
 from repro.data.collections import (
     dblp_like_collection,
+    skewed_collection,
     uniform_collection,
     with_duplicates,
     zipf_collection,

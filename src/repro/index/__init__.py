@@ -1,0 +1,20 @@
+"""Device-resident inverted prefix-index subsystem.
+
+The CPU algorithms' prefix-filter inverted indexes, compiled into flat CSR
+device arrays and driven by Pallas candidate-generation kernels — the first
+driver family whose work scales with *candidate count* instead of |R|·|S|.
+
+Public surface:
+
+* :mod:`repro.index.postings` — :class:`PostingsIndex` (CSR ℓ-prefix
+  postings, dense frequency-ordered token ids) + :func:`build_postings`;
+  cached on :class:`~repro.core.engine.PreparedCollection` per
+  ``(sim, tau, ell)``.
+* :mod:`repro.index.candidates` — :func:`indexed_join_prepared` /
+  :func:`indexed_bitmap_join`, the ``"indexed"`` join driver (registered in
+  :mod:`repro.core.plan` and executed by
+  :class:`~repro.core.engine.JoinEngine`).
+"""
+
+from repro.index.candidates import indexed_bitmap_join, indexed_join_prepared
+from repro.index.postings import PostingsIndex, build_postings

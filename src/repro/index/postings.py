@@ -1,0 +1,164 @@
+"""Compile a prepared collection's ℓ-prefix inverted index into flat CSR
+device arrays.
+
+The CPU algorithms' build artifact (``cpu_algos._build_prefix_index``) is a
+``dict[token] -> [(set_id, position), ...]`` — unbeatable for a Python probe
+loop, useless on an accelerator.  This module compiles the *same* index into
+the device-friendly form the indexed join driver consumes:
+
+* tokens are remapped to **dense frequency-ordered ids** (id 0 = rarest,
+  ties broken by token value) — the order that makes prefix postings lists
+  short where probes are frequent;
+* postings are laid out **CSR**: ``starts[tid] : starts[tid + 1]`` spans
+  token ``tid``'s entries in the flat ``post_set`` / ``post_pos`` arrays;
+* within a token's list, entries are **sorted by set id == by length** (the
+  prepared collection is length-sorted), the invariant the length filter's
+  early-outs rely on everywhere else in the repo — here it powers the
+  ``post_key`` composite ``(token id, length)`` key, globally
+  non-decreasing, so one vectorized ``searchsorted`` narrows every probe's
+  lookup to the admissible length window *before* expansion (the device
+  analogue of the CPU algorithms' sorted-list break/continue, and what
+  keeps expansion volume near the real candidate count on skewed data);
+* ``post_len`` caches ``lengths[post_set]`` so the entry filter needs no
+  extra gather;
+* probe-side lookup is a value-ordered ``vocab`` + ``searchsorted`` (rows in
+  a :class:`~repro.core.collection.Collection` are token-value sorted, so
+  the value order *is* the shared global token order prefix-filter
+  correctness requires across two collections).
+
+Instances are cached on the :class:`~repro.core.engine.PreparedCollection`
+per ``(sim, tau, ell)`` — see ``PreparedCollection.postings`` — with a
+``builds["postings"]`` counter proving reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import bounds
+
+
+@dataclasses.dataclass
+class PostingsIndex:
+    """Flat CSR ℓ-prefix inverted index over one prepared collection.
+
+    All ids are in the prepared (length-sorted) index space; callers remap
+    result pairs through ``prepared.order`` exactly like every other driver.
+    """
+
+    sim: str
+    tau: float
+    ell: int
+    max_len: int            # padded row width L; post_key scale is L + 1
+    vocab: np.ndarray       # int32[V] distinct prefix tokens, ascending value
+    vocab_tid: np.ndarray   # int32[V] dense frequency-ordered id of vocab[k]
+    starts: np.ndarray      # int32[V + 1] CSR row starts over dense ids
+    post_set: np.ndarray    # int32[P] set id (sorted space), ascending per row
+    post_pos: np.ndarray    # int32[P] token position inside the set row
+    post_len: np.ndarray    # int32[P] == lengths[post_set]
+    post_key: np.ndarray    # int32[P] tid * (L + 1) + post_len, non-decreasing
+    prefix_len: np.ndarray  # int32[N] ℓ-prefix length per sorted row
+    _device: Optional[Tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def num_tokens(self) -> int:
+        return int(self.vocab.shape[0])
+
+    @property
+    def num_postings(self) -> int:
+        return int(self.post_set.shape[0])
+
+    def device_arrays(self):
+        """(vocab, vocab_tid, post_set, post_pos, post_len, post_key) as jnp
+        device arrays, cached."""
+        if self._device is None:
+            import jax.numpy as jnp
+            self._device = tuple(jnp.asarray(a) for a in (
+                self.vocab, self.vocab_tid,
+                self.post_set, self.post_pos, self.post_len, self.post_key))
+        return self._device
+
+    def as_dict(self) -> dict:
+        """token -> [(set_id, position), ...] — the CPU index shape, for
+        differential tests against ``cpu_algos._build_prefix_index``."""
+        out = {}
+        for k in range(self.num_tokens):
+            tid = int(self.vocab_tid[k])
+            sl = slice(int(self.starts[tid]), int(self.starts[tid + 1]))
+            out[int(self.vocab[k])] = list(
+                zip(self.post_set[sl].tolist(), self.post_pos[sl].tolist()))
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"PostingsIndex(sim={self.sim}, tau={self.tau}, "
+                f"ell={self.ell}, tokens={self.num_tokens}, "
+                f"postings={self.num_postings})")
+
+
+def build_postings(prep, sim: str, tau: float, ell: int = 1) -> PostingsIndex:
+    """Compile the ℓ-prefix inverted index of a prepared collection.
+
+    Fully vectorized (no per-set Python loop): prefix lengths come from
+    Table 2 (:func:`repro.core.bounds.prefix_length_ell`), the flat
+    ``(set, pos)`` expansion from a cumsum/searchsorted, and the CSR layout
+    from one stable argsort by dense token id (stability preserves the
+    ascending-set-id order inside each postings list).
+    """
+    lengths = np.asarray(prep.lengths, dtype=np.int64)
+    max_len = int(prep.max_len)
+    n = int(lengths.shape[0])
+    p = np.zeros(n, dtype=np.int64)
+    nz = lengths > 0
+    if nz.any():
+        p[nz] = bounds.prefix_length_ell(sim, tau, lengths[nz], ell)
+    total = int(p.sum())
+    if total == 0:
+        empty32 = np.zeros(0, dtype=np.int32)
+        return PostingsIndex(
+            sim=sim, tau=float(tau), ell=int(ell), max_len=max_len,
+            vocab=empty32, vocab_tid=empty32,
+            starts=np.zeros(1, dtype=np.int32),
+            post_set=empty32, post_pos=empty32, post_len=empty32,
+            post_key=empty32, prefix_len=p.astype(np.int32))
+
+    ends = np.cumsum(p)
+    flat = np.arange(total, dtype=np.int64)
+    set_id = np.searchsorted(ends, flat, side="right")
+    pos = flat - (ends[set_id] - p[set_id])
+    toks = np.asarray(prep.tokens)[set_id, pos].astype(np.int64)
+
+    vocab, inverse, counts = np.unique(toks, return_inverse=True,
+                                       return_counts=True)
+    # Dense frequency-ordered ids: rarest first, ties by ascending value.
+    order = np.lexsort((vocab, counts))
+    rank = np.empty(len(vocab), dtype=np.int64)
+    rank[order] = np.arange(len(vocab))
+    tid = rank[inverse]
+
+    perm = np.argsort(tid, kind="stable")  # keeps per-token set-id order
+    starts = np.zeros(len(vocab) + 1, dtype=np.int64)
+    starts[1:] = np.cumsum(np.bincount(tid, minlength=len(vocab)))
+    post_set = set_id[perm].astype(np.int32)
+    post_len = lengths[post_set].astype(np.int64)
+    # Composite (token id, length) key: per-token runs are length-ascending
+    # (set ids are length-sorted), so the key is globally non-decreasing and
+    # one searchsorted narrows any probe's lookup to its length window.
+    if len(vocab) * (max_len + 1) > np.iinfo(np.int32).max:
+        raise ValueError(
+            f"postings key space {len(vocab)} tokens x (max_len={max_len} + 1)"
+            f" overflows int32; shrink the vocabulary or pad width")
+    post_key = tid[perm] * (max_len + 1) + post_len
+    return PostingsIndex(
+        sim=sim, tau=float(tau), ell=int(ell), max_len=max_len,
+        vocab=vocab.astype(np.int32),
+        vocab_tid=rank.astype(np.int32),
+        starts=starts.astype(np.int32),
+        post_set=post_set,
+        post_pos=pos[perm].astype(np.int32),
+        post_len=post_len.astype(np.int32),
+        post_key=post_key.astype(np.int32),
+        prefix_len=p.astype(np.int32))

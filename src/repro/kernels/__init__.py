@@ -5,6 +5,9 @@
 * :mod:`repro.kernels.bitplane` — MXU int8 bit-plane reformulation.
 * :mod:`repro.kernels.compaction` — tile-count prepass for device-resident
   candidate compaction (sizes the fixed-capacity buffers from real counts).
+* :mod:`repro.kernels.postings` — index-driven candidate generation: the
+  per-posting entry filter and the pairwise bitmap-verdict kernel consumed
+  by the ``"indexed"`` driver (:mod:`repro.index`).
 * :mod:`repro.kernels.ops` — jit'd public wrappers with impl dispatch.
 * :mod:`repro.kernels.ref` — pure-jnp oracles for validation.
 """

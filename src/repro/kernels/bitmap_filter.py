@@ -119,7 +119,9 @@ def _tile_verdict(r_words: jnp.ndarray, s_words: jnp.ndarray,
     ub = (lsum - ham) // 2
     # Tighten: overlap can never exceed min(|r|, |s|).
     ub = jnp.minimum(ub, jnp.minimum(lr[:, None], ls[None, :]))
-    need = bounds.required_overlap(sim, tau, lr[:, None], ls[None, :])
+    # Prune against the epsilon-relaxed threshold: float32 rounding may sit
+    # a few ulps above the f64 oracle value, and a prune is irreversible.
+    need = bounds.required_overlap_safe(sim, tau, lr[:, None], ls[None, :])
     passed = ub.astype(jnp.float32) >= need
     # Cutoff (Alg. 7): past the precision cliff the bitmap test is void —
     # such pairs must be *kept* (conservative), not pruned.

@@ -22,9 +22,10 @@ import numpy as np
 
 from repro.core import bounds
 from repro.core.bitmap import popcount_rows, unpack_bits
-from repro.kernels import bitplane, bitmap_filter, compaction, ref
+from repro.kernels import bitplane, bitmap_filter, compaction, postings, ref
 
 _TILE = bitmap_filter.DEFAULT_TILE
+_TILE_1D = postings.DEFAULT_TILE_1D
 
 
 def _on_tpu() -> bool:
@@ -119,7 +120,7 @@ def candidate_matrix(
         lr = len_r.astype(jnp.int32)[:, None]
         ls = len_s.astype(jnp.int32)[None, :]
         ub = jnp.minimum((lr + ls - ham) // 2, jnp.minimum(lr, ls))
-        need = bounds.required_overlap(sim, tau, lr, ls)
+        need = bounds.required_overlap_safe(sim, tau, lr, ls)
         cand = (ub.astype(jnp.float32) >= need) | (lr > cutoff) | (ls > cutoff)
         cand &= (lr > 0) & (ls > 0)
         if self_join:
@@ -132,7 +133,7 @@ def candidate_matrix(
         lr = len_r.astype(jnp.int32)[:, None]
         ls = len_s.astype(jnp.int32)[None, :]
         ub = jnp.minimum((lr + ls - ham) // 2, jnp.minimum(lr, ls))
-        need = bounds.required_overlap(sim, tau, lr, ls)
+        need = bounds.required_overlap_safe(sim, tau, lr, ls)
         cand = (ub.astype(jnp.float32) >= need) | (lr > cutoff) | (ls > cutoff)
         cand &= (lr > 0) & (ls > 0)
         if self_join:
@@ -202,3 +203,104 @@ def count_candidates(
         pr, ps, plr, pls, plo, phi, sim=sim, tau=tau, self_join=self_join,
         cutoff=cutoff, window=window, tile_r=tile, tile_s=tile,
         interpret=interpret)
+
+
+def _resolve_pairwise_impl(impl: str, b: int) -> str:
+    """Pairwise (1-D stream) kernels have no MXU formulation: the bitplane
+    trick needs an all-pairs matmul.  'mxu'/'ref_mxu' resolve to their
+    elementwise equivalents."""
+    impl = resolve_impl(impl, b)
+    if impl == "mxu":
+        return "swar"
+    if impl == "ref_mxu":
+        return "ref"
+    return impl
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sim", "tau", "self_join", "impl", "interpret", "tile"),
+)
+def entry_filter(
+    len_r: jnp.ndarray,
+    pos_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    pos_s: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    idx_r: jnp.ndarray,
+    idx_s: jnp.ndarray,
+    valid: jnp.ndarray,
+    sim: str,
+    tau: float,
+    self_join: bool = False,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    tile: int = _TILE_1D,
+) -> jnp.ndarray:
+    """Postings-entry admission mask -> bool[G] (index candidate generation).
+
+    Applies the classic filters of :mod:`repro.core.filters` per expanded
+    posting entry: the probe's integer length window on |r|, the positional
+    upper bound at this matching prefix position, non-empty rows, and (for
+    self-joins) the strict ``idx_r < idx_s`` triangle.  ``valid`` masks
+    padding/overrun slots.
+    """
+    (g,) = len_r.shape
+    impl = _resolve_pairwise_impl(impl, 32)
+    if interpret is None:
+        interpret = not _on_tpu()
+    args = (len_r, pos_r, len_s, pos_s, lo, hi, idx_r, idx_s)
+    if impl == "ref":
+        return ref.entry_filter_ref(*args, valid, sim=sim, tau=tau,
+                                    self_join=self_join)
+    if impl != "swar":
+        raise ValueError(f"unknown impl {impl!r}")
+    padded = [_pad_rows(a.astype(jnp.int32), tile) for a in args]
+    pvalid = _pad_rows(valid, tile, fill=False)
+    out = postings.entry_filter_pallas(
+        *padded, pvalid, sim=sim, tau=tau, self_join=self_join, tile=tile,
+        interpret=interpret)
+    return out[:g]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sim", "tau", "cutoff", "impl", "interpret", "tile"),
+)
+def pair_verdict(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    sim: str,
+    tau: float,
+    cutoff: int = 1 << 30,
+    impl: str = "auto",
+    interpret: bool | None = None,
+    tile: int = _TILE_1D,
+) -> jnp.ndarray:
+    """Pairwise fused bitmap-filter verdict -> bool[G].
+
+    The same Eq. 2 + Table 1 + cutoff test as :func:`candidate_matrix`, but
+    over *gathered* candidate rows (``words_r[g]`` vs ``words_s[g]``) instead
+    of the dense cross product — the indexed driver's bitmap cost is
+    proportional to G, not |R|·|S|.
+    """
+    g, w = words_r.shape
+    impl = _resolve_pairwise_impl(impl, 32 * w)
+    if interpret is None:
+        interpret = not _on_tpu()
+    if impl == "ref":
+        return ref.pair_verdict_ref(words_r, words_s, len_r, len_s,
+                                    sim=sim, tau=tau, cutoff=cutoff)
+    if impl != "swar":
+        raise ValueError(f"unknown impl {impl!r}")
+    pr = _pad_rows(words_r, tile)
+    ps = _pad_rows(words_s, tile)
+    plr = _pad_rows(len_r.astype(jnp.int32), tile)
+    pls = _pad_rows(len_s.astype(jnp.int32), tile)
+    out = postings.pair_verdict_pallas(
+        pr, ps, plr, pls, sim=sim, tau=tau, cutoff=cutoff, tile=tile,
+        interpret=interpret)
+    return out[:g]

@@ -1,0 +1,178 @@
+"""Pallas kernels for index-driven candidate generation.
+
+The inverted prefix-index subsystem (:mod:`repro.index`) replaces the
+O(|R|·|S|) verdict *grid* with a candidate *list*: probe prefix tokens are
+looked up in a CSR postings index, matching entries are expanded into flat
+``(probe, posting)`` streams, filtered, deduplicated and only then handed to
+the bitmap filter + exact verification.  Two stages of that pipeline are
+regular, elementwise, and hot enough to deserve kernels:
+
+* :func:`entry_filter_pallas` — the per-posting admission test (length
+  window on |r|, positional filter, non-empty rows, optional self-join
+  triangle), the device form of the classic filters in
+  :mod:`repro.core.filters`.  One bool per expanded posting entry.
+* :func:`pair_verdict_pallas` — the bitmap-filter verdict evaluated
+  *pairwise* over gathered candidate bitmaps (SWAR popcount over the packed
+  words, Eq. 2 bound, Table 1 threshold, Algorithm 7 cutoff) — the same
+  test as :func:`repro.kernels.bitmap_filter._tile_verdict` but over a flat
+  candidate list instead of a dense (TR, TS) tile.  This is what makes the
+  indexed driver's bitmap cost scale with *candidates generated* rather
+  than grid cells.
+
+Both kernels are 1-D over the entry/candidate stream (tile rows of
+``DEFAULT_TILE_1D``), validated against the pure-jnp oracles in
+:mod:`repro.kernels.ref` (``tests/test_postings_kernel.py``, interpret mode
+on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bounds
+from repro.kernels.bitmap_filter import _popcount32
+
+DEFAULT_TILE_1D = 1024
+
+
+def _entry_filter_body(lr, rpos, ls, spos, lo, hi, gi, gj, valid,
+                       *, sim: str, tau: float, self_join: bool):
+    """Shared admission test (kernel body == ref oracle, one copy)."""
+    ok = valid & (lr > 0) & (ls > 0)
+    # Length filter: |r| inside the probe's integer Table 2 window.
+    ok &= (lr >= lo) & (lr <= hi)
+    # Positional filter (Section 2.3.3) at this matching prefix position;
+    # candidate generation ORs entries per pair, so this prunes a pair only
+    # when *every* shared prefix token fails the bound — conservative.
+    # Prune-side comparison -> epsilon-relaxed threshold (f32 may round up).
+    ub = bounds.positional_upper_bound_int(lr, ls, rpos, spos)
+    need = bounds.required_overlap_safe(sim, tau, lr, ls)
+    ok &= ub.astype(jnp.float32) >= need
+    if self_join:
+        ok &= gi < gj
+    return ok
+
+
+def _make_entry_filter_kernel(sim: str, tau: float, self_join: bool):
+    def kernel(lr_ref, rpos_ref, ls_ref, spos_ref, lo_ref, hi_ref,
+               gi_ref, gj_ref, valid_ref, out_ref):
+        out_ref[...] = _entry_filter_body(
+            lr_ref[...].astype(jnp.int32), rpos_ref[...].astype(jnp.int32),
+            ls_ref[...].astype(jnp.int32), spos_ref[...].astype(jnp.int32),
+            lo_ref[...].astype(jnp.int32), hi_ref[...].astype(jnp.int32),
+            gi_ref[...].astype(jnp.int32), gj_ref[...].astype(jnp.int32),
+            valid_ref[...], sim=sim, tau=tau, self_join=self_join)
+
+    return kernel
+
+
+def entry_filter_pallas(
+    len_r: jnp.ndarray,
+    pos_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    pos_s: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    idx_r: jnp.ndarray,
+    idx_s: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    sim: str,
+    tau: float,
+    self_join: bool,
+    tile: int = DEFAULT_TILE_1D,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Per-entry admission mask -> bool[G] (G must be a tile multiple;
+    ops.py pads with ``valid=False`` slots that never survive)."""
+    (g,) = len_r.shape
+    grid = (g // tile,)
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    kernel = _make_entry_filter_kernel(sim, float(tau), self_join)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * 9,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.bool_),
+        interpret=interpret,
+    )(len_r, pos_r, len_s, pos_s, lo, hi, idx_r, idx_s, valid)
+
+
+def _pairwise_hamming(r_words: jnp.ndarray, s_words: jnp.ndarray) -> jnp.ndarray:
+    """(G, W) x (G, W) uint32 -> int32[G] pairwise Hamming distances."""
+    w = r_words.shape[1]
+
+    def body(k, acc):
+        rw = jax.lax.dynamic_index_in_dim(r_words, k, 1, keepdims=False)
+        sw = jax.lax.dynamic_index_in_dim(s_words, k, 1, keepdims=False)
+        return acc + _popcount32(rw ^ sw).astype(jnp.int32)
+
+    acc0 = jnp.zeros((r_words.shape[0],), dtype=jnp.int32)
+    return jax.lax.fori_loop(0, w, body, acc0)
+
+
+def _pair_verdict_body(r_words, s_words, lr, ls, *, sim: str, tau: float,
+                       cutoff: int):
+    """Pairwise bitmap-filter verdict (kernel body == ref oracle)."""
+    ham = _pairwise_hamming(r_words, s_words)
+    ub = (lr + ls - ham) // 2
+    ub = jnp.minimum(ub, jnp.minimum(lr, ls))
+    # Prune-side comparison -> epsilon-relaxed threshold (f32 may round up).
+    need = bounds.required_overlap_safe(sim, tau, lr, ls)
+    passed = ub.astype(jnp.float32) >= need
+    # Cutoff (Alg. 7): past the precision cliff the bitmap test is void —
+    # such pairs must be *kept* (conservative), not pruned.
+    over_cut = (lr > cutoff) | (ls > cutoff)
+    cand = passed | over_cut
+    cand &= (lr > 0) & (ls > 0)
+    return cand
+
+
+def _make_pair_verdict_kernel(sim: str, tau: float, cutoff: int):
+    def kernel(r_ref, s_ref, lr_ref, ls_ref, out_ref):
+        out_ref[...] = _pair_verdict_body(
+            r_ref[...], s_ref[...],
+            lr_ref[...].astype(jnp.int32), ls_ref[...].astype(jnp.int32),
+            sim=sim, tau=tau, cutoff=cutoff)
+
+    return kernel
+
+
+def pair_verdict_pallas(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    *,
+    sim: str,
+    tau: float,
+    cutoff: int = 1 << 30,
+    tile: int = DEFAULT_TILE_1D,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pairwise fused bitmap-filter verdict -> bool[G].
+
+    ``words_r``/``words_s`` are *gathered* per-candidate packed bitmaps
+    (uint32[G, W]); G must be a tile multiple (ops.py pads with length-0
+    rows that are never candidates).
+    """
+    g, w = words_r.shape
+    grid = (g // tile,)
+    kernel = _make_pair_verdict_kernel(sim, float(tau), int(cutoff))
+    vec_spec = pl.BlockSpec((tile,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, w), lambda i: (i, 0)),
+            pl.BlockSpec((tile, w), lambda i: (i, 0)),
+            vec_spec,
+            vec_spec,
+        ],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.bool_),
+        interpret=interpret,
+    )(words_r, words_s, len_r, len_s)

@@ -46,7 +46,8 @@ def candidate_matrix_ref(
     ls = len_s.astype(jnp.int32)[None, :]
     ub = (lr + ls - ham) // 2
     ub = jnp.minimum(ub, jnp.minimum(lr, ls))
-    need = required_overlap_ref(sim, tau, lr, ls)
+    # Prune-side comparison -> epsilon-relaxed threshold (f32 may round up).
+    need = bounds.required_overlap_safe(sim, tau, lr, ls)
     passed = ub.astype(jnp.float32) >= need
     over_cut = (lr > cutoff) | (ls > cutoff)
     cand = passed | over_cut
@@ -58,6 +59,67 @@ def candidate_matrix_ref(
         gj = jnp.arange(ns)[None, :]
         cand &= gi < gj
     return cand
+
+
+def entry_filter_ref(
+    len_r: jnp.ndarray,
+    pos_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    pos_s: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    idx_r: jnp.ndarray,
+    idx_s: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    sim: str,
+    tau: float,
+    self_join: bool,
+) -> jnp.ndarray:
+    """Pure-jnp oracle of the postings entry-filter kernel.
+
+    Independent formulation (masked where-chains instead of the kernel's
+    boolean algebra) of the same admission test: non-empty rows, the
+    probe's integer length window on |r|, the Section 2.3.3 positional
+    bound at this matching prefix position, and (self-join) the strict
+    upper triangle in sorted ids.
+    """
+    lr = len_r.astype(jnp.int32)
+    ls = len_s.astype(jnp.int32)
+    ub = 1 + jnp.where(lr - pos_r <= ls - pos_s, lr - pos_r, ls - pos_s) - 1
+    need = bounds.required_overlap_safe(sim, tau, lr, ls)
+    ok = jnp.where(valid & (lr > 0) & (ls > 0), True, False)
+    ok = jnp.where((lr >= lo.astype(jnp.int32)) & (lr <= hi.astype(jnp.int32)),
+                   ok, False)
+    ok = jnp.where(ub.astype(jnp.float32) >= need, ok, False)
+    if self_join:
+        ok = jnp.where(idx_r < idx_s, ok, False)
+    return ok
+
+
+def pair_verdict_ref(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    *,
+    sim: str,
+    tau: float,
+    cutoff: int = 1 << 30,
+) -> jnp.ndarray:
+    """Pure-jnp oracle of the pairwise bitmap-verdict kernel.
+
+    Independent formulation (XOR + popcount over the full word axis, no
+    fori_loop) so kernel bugs cannot hide behind a shared implementation;
+    agrees elementwise with ``candidate_matrix_ref``'s diagonal.
+    """
+    ham = jnp.sum(popcount32(words_r ^ words_s).astype(jnp.int32), axis=-1)
+    lr = len_r.astype(jnp.int32)
+    ls = len_s.astype(jnp.int32)
+    ub = jnp.minimum((lr + ls - ham) // 2, jnp.minimum(lr, ls))
+    need = bounds.required_overlap_safe(sim, tau, lr, ls)
+    cand = (ub.astype(jnp.float32) >= need) | (lr > cutoff) | (ls > cutoff)
+    return cand & (lr > 0) & (ls > 0)
 
 
 def count_candidates_ref(

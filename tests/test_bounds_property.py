@@ -118,11 +118,105 @@ def test_required_overlap_is_the_single_shared_copy():
 @settings(max_examples=40, deadline=None)
 @given(sim=st.sampled_from(["overlap", "jaccard", "cosine", "dice"]),
        tau=st.floats(0.2, 0.95), lr=st.integers(0, 300), ls=st.integers(0, 300))
-def test_length_window_int_equals_float_window(sim, tau, lr, ls):
-    """ceil/floor integer bounds are exactly the real-valued Table 2 window
-    for integer |s| — the identity the device-resident path relies on."""
+def test_length_window_int_is_exact_and_near_float_window(sim, tau, lr, ls):
+    """The integer window is the verification-exact one: it admits a
+    partner size iff the best achievable overlap ``min(|r|, |s|)`` reaches
+    the Table 1 equivalent overlap (so the length filter can never prune a
+    pair verification would accept), and it never strays more than one
+    integer from the raw float Table 2 window (whose ceil/floor can drift
+    off boundary values like ``5 * 0.8``)."""
     if sim == "overlap":
         tau = float(max(1, int(tau * 10)))
-    lo_f, hi_f = bounds.length_bounds(sim, tau, np.float64(max(lr, 1)))
-    lo_i, hi_i = bounds.length_window_int(sim, tau, np.array([max(lr, 1)]))
-    assert ((ls >= lo_f) and (ls <= hi_f)) == ((ls >= lo_i[0]) and (ls <= hi_i[0]))
+    lr = max(lr, 1)
+    lo_i, hi_i = bounds.length_window_int(sim, tau, np.array([lr]))
+    in_window = bool(lo_i[0] <= ls <= hi_i[0])
+    admissible = (ls >= 1
+                  and min(lr, ls) >= bounds.equivalent_overlap(sim, tau, lr, ls))
+    if admissible:
+        assert in_window, (sim, tau, lr, ls, lo_i, hi_i)
+    lo_f, hi_f = bounds.length_bounds(sim, tau, np.float64(lr))
+    in_float = (ls >= lo_f) and (ls <= hi_f)
+    if in_float and ls >= 1:
+        assert in_window  # only ever widened, never shrunk
+    if in_window and not in_float:
+        # widening is bounded by one integer on each side
+        assert (lo_f - 1 <= ls <= hi_f + 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sim=st.sampled_from(["overlap", "jaccard", "cosine", "dice"]),
+       tau=st.floats(0.2, 0.95), lr=st.integers(1, 300), ls=st.integers(0, 300))
+def test_length_window_int_is_symmetric(sim, tau, lr, ls):
+    """In exact arithmetic the Table 2 window is symmetric (|s| admissible
+    for |r| iff |r| admissible for |s|); float rounding used to break this
+    on boundaries like (4, 5) at Jaccard 0.8 — the need-corrected integer
+    window must not."""
+    ls = max(ls, 1)
+    lo_r, hi_r = bounds.length_window_int(sim, tau, np.array([lr]))
+    lo_s, hi_s = bounds.length_window_int(sim, tau, np.array([ls]))
+    assert (lo_r[0] <= ls <= hi_r[0]) == (lo_s[0] <= lr <= hi_s[0]), (
+        sim, tau, lr, ls, (lo_r, hi_r), (lo_s, hi_s))
+
+
+def test_length_window_int_fixes_known_boundary_drift():
+    """5 * 0.8 == 4.0000000000000002 in float64: the raw ceil would exclude
+    |r| = 4 from |s| = 5's window at Jaccard 0.8 while verification accepts
+    the (4 ⊂ 5) pair — the regression the 20k indexed-vs-blocked mismatch
+    exposed."""
+    lo, hi = bounds.length_window_int("jaccard", 0.8, np.array([5]))
+    assert lo[0] <= 4 <= hi[0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(sim=st.sampled_from(["overlap", "jaccard", "cosine", "dice"]),
+       tau=st.floats(0.2, 0.95), lr=st.integers(1, 120), ls=st.integers(1, 120))
+def test_min_overlap_table_matches_oracle_acceptance(sim, tau, lr, ls):
+    """The gatherable integer table decides ``o >= equivalent_overlap``
+    bit-identically to the f64 oracle for every integer overlap — the
+    contract that lets device (float32) verification agree with
+    ``naive_join`` on exactly-at-threshold pairs."""
+    if sim == "overlap":
+        tau = float(max(1, int(tau * 10)))
+    tab = bounds.min_overlap_table(sim, tau, 120, 120)
+    got = int(np.asarray(bounds.min_overlap_gather(
+        sim, jnp.asarray(tab), jnp.asarray([lr]), jnp.asarray([ls])))[0])
+    assert got == int(bounds.min_overlap_int(sim, tau, lr, ls))
+    need = float(bounds.equivalent_overlap(sim, tau, lr, ls))
+    for o in range(0, min(lr, ls) + 1):
+        assert (o >= got) == (o >= need), (sim, tau, lr, ls, o, got, need)
+
+
+def test_required_overlap_safe_is_a_lower_bound():
+    """The prune-side f32 threshold never exceeds the f64 oracle value, so
+    an f32 prune is always a subset of the f64 one (keeping more is safe;
+    exact verification does the rest)."""
+    rng = np.random.default_rng(0)
+    lr = rng.integers(1, 400, size=2000)
+    ls = rng.integers(1, 400, size=2000)
+    for sim in ("jaccard", "cosine", "dice", "overlap"):
+        taus = (3.0, 5.0) if sim == "overlap" else (0.5, 0.8, 0.9)
+        for tau in taus:
+            safe = np.asarray(bounds.required_overlap_safe(
+                sim, tau, jnp.asarray(lr), jnp.asarray(ls)),
+                dtype=np.float64)
+            exact = bounds.equivalent_overlap(sim, tau, lr.astype(np.int64),
+                                              ls.astype(np.int64))
+            assert np.all(safe <= exact + 1e-12), (sim, tau)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sim=st.sampled_from(["overlap", "jaccard", "cosine", "dice"]),
+       tau=st.floats(0.2, 0.95), lr=st.integers(1, 300), ls=st.integers(1, 300))
+def test_filters_length_window_routes_through_int_window(sim, tau, lr, ls):
+    """core/filters.length_window and length_filter_mask are thin routes to
+    bounds.length_window_int — bit-identical across sims × tau, so the host
+    filter path cannot drift from the integer-exact device path."""
+    from repro.core import filters
+
+    if sim == "overlap":
+        tau = float(max(1, int(tau * 10)))
+    lo_w, hi_w = filters.length_window(sim, tau, np.array([lr]))
+    lo_b, hi_b = bounds.length_window_int(sim, tau, np.array([lr]))
+    assert np.array_equal(lo_w, lo_b) and np.array_equal(hi_w, hi_b)
+    mask = filters.length_filter_mask(sim, tau, np.array([lr]), np.array([ls]))
+    assert bool(mask[0]) == bool(lo_b[0] <= ls <= hi_b[0])

@@ -164,3 +164,33 @@ def test_invalid_compaction_mode_rejected():
     with pytest.raises(ValueError, match="compaction"):
         join.blocked_bitmap_join(_collection("uniform", 1), "jaccard", 0.8,
                                  compaction="gpu")
+
+
+@pytest.mark.parametrize("sim,tau", [("jaccard", 0.8), ("jaccard", 0.9),
+                                     ("dice", 0.8), ("cosine", 0.75)])
+def test_exactly_at_threshold_pairs_agree_across_drivers(sim, tau):
+    """Subset pairs whose similarity sits exactly on (or within float ulps
+    of) tau: every driver must return the float64 oracle's verdict.
+
+    Regression for the f32-acceptance bug where r=range(28) ⊂ s=range(35)
+    at Jaccard 0.8 got three different answers from naive / blocked /
+    indexed (device float32 re-derivation of the Table 1 threshold flips
+    membership on boundaries; acceptance now goes through the integer
+    ``bounds.min_overlap_table``)."""
+    from repro.index import indexed_bitmap_join
+
+    sets = []
+    for n in range(2, 40):
+        base = list(range(1000 + n * 60, 1000 + n * 60 + n))
+        sets.append(base)
+        for extra in (1, 2, 3, 7):
+            sets.append(base + list(range(7000 + n * 60, 7000 + n * 60 + extra)))
+    col = from_lists(sets)
+    oracle = join.naive_join(col, sim, tau)
+    host = join.blocked_bitmap_join(col, sim, tau, b=32, block=32)
+    dev = join.blocked_bitmap_join(col, sim, tau, b=32, block=32,
+                                   compaction="device")
+    idx = indexed_bitmap_join(col, sim, tau, b=32, probe_block=32)
+    assert np.array_equal(oracle, host)
+    assert np.array_equal(oracle, dev)
+    assert np.array_equal(oracle, idx)

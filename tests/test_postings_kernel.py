@@ -1,0 +1,193 @@
+"""The postings subsystem's building blocks: CSR compilation and the
+candidate-generation kernels.
+
+* ``build_postings`` must compile exactly the CPU algorithms' inverted
+  index (``cpu_algos._build_prefix_index``) into CSR form — same tokens,
+  same (set, position) entries, same per-token order — plus the invariants
+  the device path relies on (dense frequency-ordered ids, non-decreasing
+  composite window key).
+* The Pallas kernels (``entry_filter`` / ``pair_verdict``) must agree
+  bit-for-bit with the pure-jnp oracles in ``repro.kernels.ref`` (interpret
+  mode on CPU), and ``pair_verdict`` with the dense
+  ``candidate_matrix_ref``'s diagonal.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cpu_algos
+from repro.core.collection import from_lists
+from repro.core.engine import prepare
+from repro.index.postings import build_postings
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+
+def _collection(seed: int, n: int = 48, universe: int = 110):
+    rng = np.random.default_rng(seed)
+    sets = [rng.choice(universe, size=rng.integers(1, 13), replace=False).tolist()
+            for _ in range(n)]
+    return from_lists(sets, pad_to=16)
+
+
+# ---------------------------------------------------------------------------
+# CSR compilation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sim,tau", [("jaccard", 0.8), ("cosine", 0.6),
+                                     ("dice", 0.75), ("overlap", 3.0)])
+@pytest.mark.parametrize("ell", [1, 3])
+def test_csr_matches_cpu_prefix_index(sim, tau, ell):
+    prep = prepare(_collection(1))
+    post = prep.postings(sim, tau, ell)
+    want = cpu_algos._build_prefix_index(prep.sorted_collection, sim, tau,
+                                         ell=ell)
+    got = post.as_dict()
+    # Same tokens, same entries, same (ascending set id) order per token.
+    assert got == {t: entries for t, entries in want.items() if entries}
+    assert post.num_postings == sum(len(v) for v in want.values())
+
+
+def test_csr_invariants_and_frequency_order():
+    prep = prepare(_collection(2))
+    post = prep.postings("jaccard", 0.8)
+    # vocab is value-sorted, ids are a permutation.
+    assert np.all(np.diff(post.vocab) > 0)
+    assert sorted(post.vocab_tid.tolist()) == list(range(post.num_tokens))
+    # dense ids are frequency-ordered: ascending (count, token value).
+    counts = np.diff(post.starts)
+    by_id_counts = counts  # starts is already laid out by dense id
+    order_tokens = np.empty(post.num_tokens, dtype=np.int64)
+    order_tokens[post.vocab_tid] = post.vocab
+    keys = list(zip(by_id_counts.tolist(), order_tokens.tolist()))
+    assert keys == sorted(keys)
+    # postings inside each token's row are set-id (== length) sorted.
+    for tid in range(post.num_tokens):
+        sl = slice(int(post.starts[tid]), int(post.starts[tid + 1]))
+        assert np.all(np.diff(post.post_set[sl]) > 0)
+        assert np.all(np.diff(post.post_len[sl]) >= 0)
+    # the composite window key is globally non-decreasing.
+    assert np.all(np.diff(post.post_key) >= 0)
+    # post_len really is lengths[post_set].
+    assert np.array_equal(post.post_len, prep.lengths[post.post_set])
+
+
+def test_postings_cached_per_key_on_prepared():
+    prep = prepare(_collection(3))
+    p1 = prep.postings("jaccard", 0.8)
+    p2 = prep.postings("jaccard", 0.8)
+    assert p1 is p2
+    assert prep.builds["postings"] == 1
+    prep.postings("jaccard", 0.8, ell=2)
+    prep.postings("cosine", 0.8)
+    assert prep.builds["postings"] == 3
+    # device arrays are cached on the artifact too
+    d1 = p1.device_arrays()
+    assert p1.device_arrays() is d1
+
+
+def test_empty_and_degenerate_collections():
+    empty = from_lists([[]], pad_to=4)
+    post = build_postings(prepare(empty), "jaccard", 0.8)
+    assert post.num_postings == 0 and post.num_tokens == 0
+    single = from_lists([[5, 9]], pad_to=4)
+    post = build_postings(prepare(single), "jaccard", 0.8)
+    assert post.num_postings >= 1
+    assert post.as_dict()[5][0] == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Kernels vs oracles (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g", [5, 100, 1024, 2500])
+@pytest.mark.parametrize("w", [1, 4])
+@pytest.mark.parametrize("sim,tau", [("jaccard", 0.7), ("overlap", 3.0)])
+def test_pair_verdict_kernel_matches_ref(g, w, sim, tau):
+    rng = np.random.default_rng(g * w)
+    wr = jnp.asarray(rng.integers(0, 2**32, size=(g, w), dtype=np.uint32))
+    ws = jnp.asarray(rng.integers(0, 2**32, size=(g, w), dtype=np.uint32))
+    lr = jnp.asarray(rng.integers(0, 20, size=g, dtype=np.int32))
+    ls = jnp.asarray(rng.integers(0, 20, size=g, dtype=np.int32))
+    want = ref.pair_verdict_ref(wr, ws, lr, ls, sim=sim, tau=tau, cutoff=12)
+    got = kops.pair_verdict(wr, ws, lr, ls, sim=sim, tau=tau, cutoff=12,
+                            impl="swar", interpret=True)
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_pair_verdict_matches_candidate_matrix_diagonal():
+    rng = np.random.default_rng(9)
+    n, w = 64, 2
+    wr = jnp.asarray(rng.integers(0, 2**32, size=(n, w), dtype=np.uint32))
+    ws = jnp.asarray(rng.integers(0, 2**32, size=(n, w), dtype=np.uint32))
+    lr = jnp.asarray(rng.integers(0, 16, size=n, dtype=np.int32))
+    ls = jnp.asarray(rng.integers(0, 16, size=n, dtype=np.int32))
+    dense = ref.candidate_matrix_ref(wr, ws, lr, ls, sim="jaccard", tau=0.7,
+                                     self_join=False, cutoff=10)
+    pairwise = ref.pair_verdict_ref(wr, ws, lr, ls, sim="jaccard", tau=0.7,
+                                    cutoff=10)
+    assert np.array_equal(np.asarray(jnp.diagonal(dense)),
+                          np.asarray(pairwise))
+
+
+@pytest.mark.parametrize("g", [64, 1000, 3000])
+@pytest.mark.parametrize("self_join", [False, True])
+def test_entry_filter_kernel_matches_ref(g, self_join):
+    rng = np.random.default_rng(g)
+    args = dict(
+        len_r=jnp.asarray(rng.integers(0, 16, size=g, dtype=np.int32)),
+        pos_r=jnp.asarray(rng.integers(0, 8, size=g, dtype=np.int32)),
+        len_s=jnp.asarray(rng.integers(0, 16, size=g, dtype=np.int32)),
+        pos_s=jnp.asarray(rng.integers(0, 8, size=g, dtype=np.int32)),
+        lo=jnp.asarray(rng.integers(0, 10, size=g, dtype=np.int32)),
+        hi=jnp.asarray(rng.integers(5, 20, size=g, dtype=np.int32)),
+        idx_r=jnp.asarray(rng.integers(0, 50, size=g, dtype=np.int32)),
+        idx_s=jnp.asarray(rng.integers(0, 50, size=g, dtype=np.int32)),
+    )
+    valid = jnp.asarray(rng.random(g) > 0.2)
+    for sim, tau in [("jaccard", 0.8), ("dice", 0.6)]:
+        want = ref.entry_filter_ref(*args.values(), valid, sim=sim, tau=tau,
+                                    self_join=self_join)
+        got = kops.entry_filter(*args.values(), valid, sim=sim, tau=tau,
+                                self_join=self_join, impl="swar",
+                                interpret=True)
+        assert np.array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_entry_filter_respects_each_filter():
+    """Hand-built cases: each admission condition prunes independently."""
+    one = lambda v: jnp.asarray([v], dtype=jnp.int32)
+    t = jnp.asarray([True])
+    base = dict(len_r=one(10), pos_r=one(0), len_s=one(10), pos_s=one(0),
+                lo=one(8), hi=one(12), idx_r=one(3), idx_s=one(7))
+
+    def run(sim="jaccard", tau=0.8, self_join=False, valid=t, **over):
+        kw = {**base, **{k: one(v) for k, v in over.items()}}
+        return bool(np.asarray(ref.entry_filter_ref(
+            *kw.values(), valid, sim=sim, tau=tau, self_join=self_join))[0])
+
+    assert run()                                  # everything admissible
+    assert not run(valid=jnp.asarray([False]))    # padding slot
+    assert not run(len_r=0)                       # empty index set
+    assert not run(len_r=7)                       # below the length window
+    assert not run(len_r=13)                      # above the length window
+    # positional filter: match deep in both suffixes cannot reach need
+    assert not run(pos_r=8, pos_s=8, lo=0, hi=20)
+    # self-join triangle
+    assert run(self_join=True)
+    assert not run(self_join=True, idx_r=7, idx_s=7)
+    assert not run(self_join=True, idx_r=9, idx_s=7)
+
+
+def test_bounds_positional_twin_matches_host():
+    rng = np.random.default_rng(0)
+    from repro.core import bounds
+    lr = rng.integers(1, 30, size=200)
+    ls = rng.integers(1, 30, size=200)
+    pr = rng.integers(0, 10, size=200)
+    ps = rng.integers(0, 10, size=200)
+    want = bounds.positional_upper_bound(lr, ls, pr, ps)
+    got = np.asarray(bounds.positional_upper_bound_int(
+        jnp.asarray(lr), jnp.asarray(ls), jnp.asarray(pr), jnp.asarray(ps)))
+    assert np.array_equal(want, got)
