@@ -15,10 +15,15 @@ reuses the cached bitmap words and returns oracle-identical pairs.
 ``--indexed-smoke`` is the indexed-driver twin: prepare once, probe twice
 through an ``"indexed"`` plan, assert the postings-CSR cache was built
 exactly once (build counters) and both probes match the oracle.
+``--sharded-smoke`` is the mesh twin: the same contract through a
+``"sharded-indexed"`` plan over all available devices, additionally
+asserting the token-slab partition (``builds["sharded_postings"]``) was
+built exactly once and reused by the second probe.
 
 ``run()`` additionally measures indexed-vs-blocked on one skewed self-join
-(both rows carry their ``JoinStats``, so the trajectory JSON records the
-candidate funnel of each driver side by side).
+and ring-vs-sharded-indexed on the same mesh workload (all rows carry their
+``JoinStats``, so the trajectory JSON records the candidate funnel of each
+driver side by side).
 """
 
 from __future__ import annotations
@@ -122,6 +127,7 @@ def run() -> List[Row]:
         "engine_rebuild_per_call", rebuild * 1e6,
         f"one-shot blocked_bitmap_join (re-sorts + regenerates bitmaps)"))
     rows.extend(_indexed_vs_blocked(smoke))
+    rows.extend(_ring_vs_sharded(smoke))
     return rows
 
 
@@ -161,6 +167,54 @@ def _indexed_vs_blocked(smoke: bool) -> List[Row]:
             stats=istats.to_dict()),
     ]
     return rows
+
+
+def _ring_vs_sharded(smoke: bool) -> List[Row]:
+    """Ring (dense grid sharding) vs sharded-indexed (postings sharding) on
+    one mesh self-join: identical exact pair set, funnels side by side in
+    the trajectory JSON.  Uses whatever devices the process has (one in the
+    check.sh smoke; eight under the multidevice XLA_FLAGS harness)."""
+    import jax
+
+    from repro.core.join import ring_join_prepared
+    from repro.data.collections import skewed_collection, with_duplicates
+    from repro.distributed.sharded_index import sharded_indexed_join_prepared
+    from repro.launch.mesh import make_mesh
+
+    n = 800 if smoke else 4000
+    n_dev = jax.device_count()
+    mesh = make_mesh((n_dev,), ("data",))
+    col = with_duplicates(
+        skewed_collection(n_sets=n, avg_size=10, n_tokens=30_000, seed=9),
+        n_clusters=n // 50, cluster_size=3, jaccard=0.9, seed=10)
+    prep = prepare(col)
+
+    t0 = time.perf_counter()
+    rpairs, counters, _ovf = ring_join_prepared(
+        prep, mesh=mesh, axis="data", sim=JACCARD, tau=TAU, b=B,
+        return_stats=True)
+    t_ring = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    spairs, sstats = sharded_indexed_join_prepared(
+        prep, mesh=mesh, axis="data", sim=JACCARD, tau=TAU, b=B,
+        probe_block=2048, return_stats=True)
+    t_sharded = time.perf_counter() - t0
+    assert np.array_equal(rpairs, spairs)
+
+    nnz = int((prep.lengths > 0).sum())
+    ring_cells = nnz * (nnz - 1) // 2  # the grid the ring sweep evaluates
+    return [
+        Row("engine_ring_selfjoin", t_ring * 1e6,
+            f"n={n} devices={n_dev} pairs={len(rpairs)} "
+            f"bitmap_cells={ring_cells} "
+            f"candidates={int(np.asarray(counters)[:, 0].sum())}"),
+        Row("engine_sharded_indexed_selfjoin", t_sharded * 1e6,
+            f"n={n} devices={n_dev} pairs={len(spairs)} "
+            f"bitmap_cells={sstats.candidates_generated} "
+            f"cells_vs_ring={sstats.candidates_generated / max(ring_cells, 1):.4f} "
+            f"expanded={sstats.postings_expanded}",
+            stats=sstats.to_dict()),
+    ]
 
 
 def run_engine_smoke() -> List[Row]:
@@ -233,12 +287,61 @@ def run_indexed_smoke() -> List[Row]:
                 stats=stats2.to_dict())]
 
 
+def run_sharded_smoke() -> List[Row]:
+    """CI gate (``scripts/check.sh``): the sharded-indexed engine contract.
+
+    Prepare a corpus once, probe the same prepared batch twice through a
+    ``"sharded-indexed"`` plan on a mesh over all available devices; the
+    second probe must reuse the cached postings CSR *and* its token-slab
+    partition (``builds["postings"] == builds["sharded_postings"] == 1``)
+    and both probes must return the exact oracle pair set.
+    """
+    import jax
+
+    from repro.launch.mesh import make_mesh
+
+    corpus, batches = _corpus_and_batches(400, 100, 1, seed=13)
+    batch = batches[0]
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    plan = JoinPlan(driver="sharded-indexed", sim=JACCARD, tau=TAU, b=B,
+                    block=64)
+    engine = JoinEngine(corpus, JACCARD, TAU, plan=plan, mesh=mesh,
+                        axis="data")
+    prep_batch = prepare(batch)
+    t0 = time.perf_counter()
+    pairs1, _ = engine.probe(prep_batch)
+    t1 = time.perf_counter() - t0
+    builds_after_first = engine.prepared.build_counts()
+    assert builds_after_first["postings"] == 1, builds_after_first
+    assert builds_after_first["sharded_postings"] == 1, builds_after_first
+    t0 = time.perf_counter()
+    pairs2, stats2 = engine.probe(prep_batch)
+    t2 = time.perf_counter() - t0
+    # The second probe must not rebuild anything on either side...
+    assert engine.prepared.build_counts() == builds_after_first, (
+        builds_after_first, engine.prepared.build_counts())
+    assert engine.prepared.builds["sort"] == 1
+    assert engine.prepared.builds["bitmap"] == 1
+    assert prep_batch.builds["sharded_postings"] == 0  # corpus side only
+    # ...and must return the oracle's exact pair set, like the first.
+    oracle = naive_join(corpus, batch, JACCARD, TAU)
+    assert np.array_equal(pairs1, oracle) and np.array_equal(pairs2, oracle)
+    assert (stats2.verified_true <= stats2.candidates
+            <= stats2.candidates_generated == stats2.total_pairs)
+    return [Row("sharded_smoke_probe2", t2 * 1e6,
+                f"probe1={t1*1e6:.0f}us devices={len(mesh.devices.flat)} "
+                f"pairs={len(pairs2)} builds={engine.prepared.builds} OK",
+                stats=stats2.to_dict())]
+
+
 if __name__ == "__main__":
     import sys
 
     argv = sys.argv[1:]
     if "--indexed-smoke" in argv:
         fn = run_indexed_smoke
+    elif "--sharded-smoke" in argv:
+        fn = run_sharded_smoke
     elif "--smoke" in argv:
         fn = run_engine_smoke
     else:

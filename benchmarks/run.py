@@ -18,7 +18,7 @@ PRs instead of eyeballing CSV.
 revision, row list with stats) to the JSON list at PATH — the cross-PR perf
 trajectory.  The output path is a parameter (``--trajectory=PATH`` or a
 following non-flag argument); bare ``--trajectory`` defaults to the
-repo-root ``BENCH_PR4.json``.  ``scripts/check.sh`` passes the path
+repo-root ``BENCH_PR5.json``.  ``scripts/check.sh`` passes the path
 explicitly (overridable via ``REPRO_BENCH_TRAJECTORY``), so every gate run
 extends the history instead of overwriting it.  When using the bare form
 together with module filters, put the filters first — the token right
@@ -34,7 +34,7 @@ import sys
 import time
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DEFAULT_TRAJECTORY = os.path.join(_REPO_ROOT, "BENCH_PR4.json")
+DEFAULT_TRAJECTORY = os.path.join(_REPO_ROOT, "BENCH_PR5.json")
 
 MODULES = [
     "benchmarks.bench_expected_bounds",    # Fig. 5 / Eq. 4-6

@@ -16,11 +16,11 @@ fi
 
 # Benchmark smoke; --json leaves a machine-readable JoinStats trail and
 # --trajectory appends this run's summary to the repo-root perf history
-# (BENCH_PR4.json by default, parameterized via REPRO_BENCH_TRAJECTORY) so
+# (BENCH_PR5.json by default, parameterized via REPRO_BENCH_TRAJECTORY) so
 # filter-ratio / perf trajectories accumulate across PRs.
 python -m benchmarks.run --smoke \
     --json "${REPRO_BENCH_JSON:-/tmp/repro_bench_smoke.json}" \
-    --trajectory "${REPRO_BENCH_TRAJECTORY:-BENCH_PR4.json}"
+    --trajectory "${REPRO_BENCH_TRAJECTORY:-BENCH_PR5.json}"
 
 # Compaction-path smoke: the device-resident join must reproduce the host
 # path's pairs exactly on a real R×S workload.
@@ -35,3 +35,16 @@ python -m benchmarks.bench_engine --smoke
 # probe must reuse the cached postings-CSR index (builds["postings"] == 1)
 # and both probes must match the oracle exactly.
 python -m benchmarks.bench_engine --indexed-smoke
+
+# Sharded-indexed smoke: the mesh twin — prepare once, probe twice through a
+# "sharded-indexed" plan; the token-slab partition must be built exactly once
+# (builds["sharded_postings"] == 1) and both probes must match the oracle.
+python -m benchmarks.bench_engine --sharded-smoke
+
+# Mesh conformance gate: re-run the single driver-conformance suite on an
+# 8-virtual-device harness, so multi-device regressions (ring and
+# sharded-indexed alike) are caught without hardware.  The sharded-indexed
+# executor pins its pairs AND summed JoinStats to the single-device indexed
+# driver on every grid cell.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q tests/test_driver_conformance.py

@@ -19,7 +19,9 @@ on each call.  This module makes the build a first-class, reusable artifact:
   per-batch :class:`~repro.core.join.JoinStats`.  The driver and its knobs
   come from an explicit :class:`~repro.core.plan.JoinPlan`; executable
   drivers are naive / blocked / ring / indexed (the :mod:`repro.index`
-  postings-CSR candidate generator) / the four CPU algorithms.
+  postings-CSR candidate generator) / sharded-indexed (the same candidate
+  path with its postings sharded over a device mesh,
+  :mod:`repro.distributed.sharded_index`) / the four CPU algorithms.
 
 ``PreparedCollection`` duck-types the read surface of ``Collection``
 (``tokens`` / ``lengths`` / ``num_sets`` / ``max_len`` / ``row``) **over the
@@ -64,13 +66,14 @@ class PreparedCollection:
         self.lengths = source.lengths[order]
         self.builds: Dict[str, int] = {
             "sort": 1, "bitmap": 0, "window": 0, "prefix_index": 0,
-            "postings": 0}
+            "postings": 0, "sharded_postings": 0}
         self._device: Optional[Tuple] = None          # (tokens, lengths) jnp
         self._words: Dict[Tuple[int, str, bool], object] = {}
         self._words_np: Dict[Tuple[int, str, bool], np.ndarray] = {}
         self._windows: Dict[Tuple[str, float], Tuple] = {}
         self._prefix: Dict[Tuple[str, float, int], dict] = {}
         self._postings: Dict[Tuple[str, float, int], object] = {}
+        self._sharded_postings: Dict[Tuple[str, float, int, int], object] = {}
         self._sorted_collection: Optional[Collection] = None
 
     # -- Collection duck-typing (over the length-sorted view) ---------------
@@ -168,9 +171,23 @@ class PreparedCollection:
             self.builds["postings"] += 1
         return self._postings[key]
 
+    def sharded_postings(self, sim: str, tau: float, ell: int = 1,
+                         n_shards: int = 1):
+        """Cached token-slab partition of :meth:`postings` (the
+        ``"sharded-indexed"`` driver's build artifact), built at most once
+        per ``(sim, tau, ell, n_shards)``; the underlying CSR index is
+        shared with (and cached by) the single-device driver."""
+        key = (sim, float(tau), int(ell), int(n_shards))
+        if key not in self._sharded_postings:
+            from repro.index.postings import partition_postings
+            self._sharded_postings[key] = partition_postings(
+                self.postings(sim, tau, ell), n_shards)
+            self.builds["sharded_postings"] += 1
+        return self._sharded_postings[key]
+
     def build_counts(self) -> Dict[str, int]:
         """A copy of the build counters
-        (sort/bitmap/window/prefix_index/postings)."""
+        (sort/bitmap/window/prefix_index/postings/sharded_postings)."""
         return dict(self.builds)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -243,9 +260,10 @@ class JoinEngine:
     corpus-side artifacts are reused across probes — asserted by build
     counters in ``benchmarks/bench_engine.py`` and ``scripts/check.sh``.
 
-    Pass ``mesh=``/``axis=`` to execute a ``ring`` plan on a real mesh; a
-    ring plan without a mesh falls back to the blocked driver (and says so
-    in ``fallbacks``).
+    Pass ``mesh=``/``axis=`` to execute a ``ring`` or ``sharded-indexed``
+    plan on a real mesh; without one, a ring plan falls back to the blocked
+    driver and a sharded-indexed plan to its single-device twin ``indexed``
+    (both recorded in ``fallbacks``).
     """
 
     def __init__(self, corpus: Collection | PreparedCollection,
@@ -302,6 +320,10 @@ class JoinEngine:
         if driver == "ring" and self.mesh is None:
             self.fallbacks.append("ring plan without a mesh -> blocked")
             driver = "blocked"
+        if driver == "sharded-indexed" and self.mesh is None:
+            self.fallbacks.append(
+                "sharded-indexed plan without a mesh -> indexed")
+            driver = "indexed"
         if (driver == "naive" and self._auto_planned and batch is not None):
             # The auto-planner chose 'naive' from the corpus size alone (the
             # batch size was unknown at plan time); a large batch would make
@@ -339,6 +361,19 @@ class JoinEngine:
                 probe_block=plan.block, impl=plan.impl,
                 use_cutoff=plan.use_cutoff, capacity=plan.capacity,
                 return_stats=True)
+
+        if driver == "sharded-indexed":
+            from repro.distributed.sharded_index import (
+                sharded_indexed_join_prepared)
+            # The driver sums the per-shard funnel counters into the
+            # returned JoinStats (the shard-map step emits one counter row
+            # per device), so probe() reports the same funnel as "indexed".
+            return sharded_indexed_join_prepared(
+                self.prepared, prep_s, mesh=self.mesh, axis=self.axis,
+                sim=self.sim, tau=self.tau, b=plan.b, method=plan.method,
+                mix=plan.mix, ell=plan.ell, probe_block=plan.block,
+                impl=plan.impl, use_cutoff=plan.use_cutoff,
+                capacity=plan.capacity, return_stats=True)
 
         if driver == "ring":
             pairs, counters, _overflow = join_mod.ring_join_prepared(

@@ -508,76 +508,23 @@ def _window_pair_mask(len_r: np.ndarray, len_s: np.ndarray, sim: str, tau: float
 # Distributed ring join (shard_map + collective_permute)
 # ---------------------------------------------------------------------------
 
-def ring_join_sharded(
-    tokens: jnp.ndarray,
-    lengths: jnp.ndarray,
-    words: jnp.ndarray,
-    *,
-    mesh,
-    axis: str | tuple[str, ...],
-    sim: str,
-    tau: float,
-    tokens_s: jnp.ndarray | None = None,
-    lengths_s: jnp.ndarray | None = None,
-    words_s: jnp.ndarray | None = None,
-    cutoff: int = 1 << 30,
-    impl: str = "ref",
-    capacity_per_step: int | None = None,
-):
-    """Distributed exact join via a ring sweep.
+@functools.lru_cache(maxsize=256)
+def _ring_sweep_fn(mesh, axes, *, shard_r: int, shard_s: int, cap: int,
+                   sim: str, tau: float, cutoff: int, impl: str,
+                   rs_join: bool):
+    """Compile (once per static ring config) the jitted shard_map sweep.
 
-    R is sharded over ``axis`` and stays fixed per device; every ring step
-    rotates the S shard (bitmaps + tokens + lengths) one hop with
-    ``collective_permute`` while the local R shard runs the fused bitmap
-    filter + exact verification against the S block it currently holds.
-    After ``n_dev`` steps every pair has been examined exactly once — the
-    upper triangle (i < j) for a self-join (S operands omitted), the full
-    R×S grid when ``tokens_s``/``lengths_s``/``words_s`` are given.  The
-    permuted operands of step k+1 are independent of step k's math, so XLA's
-    latency-hiding scheduler can overlap the ICI transfer with tile compute.
-
-    Candidates are compacted into a fixed ``capacity_per_step`` buffer per
-    device — the TPU analogue of Algorithm 8's 2048-entry thread-local lists.
-    An overflowing step silently truncates its candidate list (``jnp.nonzero``
-    drops everything beyond ``cap``), so it is flagged *per step*: the
-    :func:`ring_join` driver re-runs exactly the flagged (device, step) tiles
-    densely and merges the results, preserving exactness.  Call that wrapper
-    unless you want to handle the escalation yourself.
-
-    Returns ``(pairs, valid, counters, overflow_steps)``:
-      pairs: int32[n_dev * steps * cap, 2] global (i, j) ids (garbage where
-        ``valid`` is False), sharded over ``axis``.
-      valid: bool with matching leading dim — verified-similar slots.
-      counters: int64[n_dev, 3] per-device (candidates, verified, overflow).
-      overflow_steps: bool[n_dev, n_dev] — [device, step] tiles whose
-        candidate count exceeded ``cap`` (their pairs are incomplete).
+    Memoized so repeated ring joins with the same mesh/shape/knobs — the
+    engine's probe loop, the conformance sweep — reuse the compiled
+    executable instead of re-tracing a fresh closure per call; the jit
+    cache then keys on operand shapes as usual.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
-    rs_join = tokens_s is not None
-    if rs_join and (lengths_s is None or words_s is None):
-        raise ValueError("R×S ring join needs tokens_s, lengths_s and words_s")
-    if not rs_join:
-        tokens_s, lengths_s, words_s = tokens, lengths, words
-
-    axes = (axis,) if isinstance(axis, str) else tuple(axis)
     axis_name = axes if len(axes) > 1 else axes[0]
     n_dev = int(np.prod([mesh.shape[a] for a in axes]))
-    n_r = tokens.shape[0]
-    n_s = tokens_s.shape[0]
-    if n_r % n_dev or n_s % n_dev:
-        raise ValueError(
-            f"collection sizes {n_r}x{n_s} must divide over {n_dev} devices (pad first)")
-    shard_r = n_r // n_dev
-    shard_s = n_s // n_dev
-    cap = capacity_per_step or max(8 * max(shard_r, shard_s), 128)
-
     spec = P(axes)
-    # Integer acceptance thresholds, replicated to every device (f32 math
-    # may only prune; membership is decided by this host-built table).
-    need_tab = verify.min_overlap_table_dev(
-        sim, float(tau), int(tokens.shape[1]), int(tokens_s.shape[1]))
 
     def local(tok, length, word, s_tok0, s_len0, s_word0, ntab):
         my = jax.lax.axis_index(axis_name)
@@ -625,6 +572,80 @@ def ring_join_sharded(
         out_specs=(P(axes),) * 4,
         check_rep=False,
     )
+    return jax.jit(fn)
+
+
+def ring_join_sharded(
+    tokens: jnp.ndarray,
+    lengths: jnp.ndarray,
+    words: jnp.ndarray,
+    *,
+    mesh,
+    axis: str | tuple[str, ...],
+    sim: str,
+    tau: float,
+    tokens_s: jnp.ndarray | None = None,
+    lengths_s: jnp.ndarray | None = None,
+    words_s: jnp.ndarray | None = None,
+    cutoff: int = 1 << 30,
+    impl: str = "ref",
+    capacity_per_step: int | None = None,
+):
+    """Distributed exact join via a ring sweep.
+
+    R is sharded over ``axis`` and stays fixed per device; every ring step
+    rotates the S shard (bitmaps + tokens + lengths) one hop with
+    ``collective_permute`` while the local R shard runs the fused bitmap
+    filter + exact verification against the S block it currently holds.
+    After ``n_dev`` steps every pair has been examined exactly once — the
+    upper triangle (i < j) for a self-join (S operands omitted), the full
+    R×S grid when ``tokens_s``/``lengths_s``/``words_s`` are given.  The
+    permuted operands of step k+1 are independent of step k's math, so XLA's
+    latency-hiding scheduler can overlap the ICI transfer with tile compute.
+
+    Candidates are compacted into a fixed ``capacity_per_step`` buffer per
+    device — the TPU analogue of Algorithm 8's 2048-entry thread-local lists.
+    An overflowing step silently truncates its candidate list (``jnp.nonzero``
+    drops everything beyond ``cap``), so it is flagged *per step*: the
+    :func:`ring_join` driver re-runs exactly the flagged (device, step) tiles
+    densely and merges the results, preserving exactness.  Call that wrapper
+    unless you want to handle the escalation yourself.
+
+    Returns ``(pairs, valid, counters, overflow_steps)``:
+      pairs: int32[n_dev * steps * cap, 2] global (i, j) ids (garbage where
+        ``valid`` is False), sharded over ``axis``.
+      valid: bool with matching leading dim — verified-similar slots.
+      counters: int64[n_dev, 3] per-device (candidates, verified, overflow).
+      overflow_steps: bool[n_dev, n_dev] — [device, step] tiles whose
+        candidate count exceeded ``cap`` (their pairs are incomplete).
+    """
+    from repro.distributed.sharding import join_axes
+
+    rs_join = tokens_s is not None
+    if rs_join and (lengths_s is None or words_s is None):
+        raise ValueError("R×S ring join needs tokens_s, lengths_s and words_s")
+    if not rs_join:
+        tokens_s, lengths_s, words_s = tokens, lengths, words
+
+    axes, _axis_name, n_dev = join_axes(mesh, axis)
+    n_r = tokens.shape[0]
+    n_s = tokens_s.shape[0]
+    if n_r % n_dev or n_s % n_dev:
+        raise ValueError(
+            f"collection sizes {n_r}x{n_s} must divide over {n_dev} devices (pad first)")
+    shard_r = n_r // n_dev
+    shard_s = n_s // n_dev
+    cap = capacity_per_step or max(8 * max(shard_r, shard_s), 128)
+
+    # Integer acceptance thresholds, replicated to every device (f32 math
+    # may only prune; membership is decided by this host-built table).
+    need_tab = verify.min_overlap_table_dev(
+        sim, float(tau), int(tokens.shape[1]), int(tokens_s.shape[1]))
+
+    fn = _ring_sweep_fn(
+        mesh, axes, shard_r=shard_r, shard_s=shard_s, cap=int(cap),
+        sim=sim, tau=float(tau), cutoff=int(cutoff), impl=impl,
+        rs_join=rs_join)
     return fn(tokens, lengths, words, tokens_s, lengths_s, words_s, need_tab)
 
 
@@ -665,11 +686,12 @@ def ring_join(
     counters are reconciled with the dense re-runs, so
     ``counters[:, 1].sum() == len(pairs)`` even under overflow.
     """
+    from repro.distributed.sharding import join_axes
+
     rs_join = tokens_s is not None
     if not rs_join:
         tokens_s, lengths_s, words_s = tokens, lengths, words
-    axes = (axis,) if isinstance(axis, str) else tuple(axis)
-    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    _axes, _name, n_dev = join_axes(mesh, axis)
     shard_r = tokens.shape[0] // n_dev
     shard_s = tokens_s.shape[0] // n_dev
 
@@ -771,8 +793,9 @@ def ring_join_prepared(
         chosen = method
     cutoff = expected.cutoff_point(chosen, b, float(tau)) if use_cutoff else 1 << 30
 
-    axes = (axis,) if isinstance(axis, str) else tuple(axis)
-    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    from repro.distributed.sharding import join_axes
+
+    _axes, _name, n_dev = join_axes(mesh, axis)
     nr, ns = prep_r.num_sets, prep_s.num_sets
     nr_pad = math.ceil(nr / n_dev) * n_dev
     ns_pad = math.ceil(ns / n_dev) * n_dev

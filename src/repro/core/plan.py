@@ -17,8 +17,15 @@ Driver vocabulary:
 * ``"ring"`` — the multi-device ring sweep (needs a mesh at execution time).
 * ``"indexed"`` — CSR prefix-index candidate generation
   (:mod:`repro.index`); work scales with candidate count, not |R|·|S|.
+* ``"sharded-indexed"`` — the same candidate path with the postings CSR cut
+  into per-device token slabs (:mod:`repro.distributed.sharded_index`);
+  needs a mesh at execution time.
 * ``"allpairs" | "ppjoin" | "groupjoin" | "adaptjoin"`` — the faithful CPU
   algorithms with the pluggable Bitmap Filter.
+
+``DRIVERS`` is the driver *registry*: the conformance suite
+(``tests/test_driver_conformance.py``) derives its sweep from it, so a new
+driver registered here cannot ship without oracle coverage.
 """
 
 from __future__ import annotations
@@ -31,7 +38,7 @@ from repro.core import bitmap as bm
 from repro.core import expected
 from repro.core.constants import BITMAP_COMBINED, OVERLAP
 
-DEVICE_DRIVERS = ("naive", "blocked", "ring", "indexed")
+DEVICE_DRIVERS = ("naive", "blocked", "ring", "indexed", "sharded-indexed")
 CPU_DRIVERS = ("allpairs", "ppjoin", "groupjoin", "adaptjoin")
 DRIVERS = DEVICE_DRIVERS + CPU_DRIVERS
 
@@ -102,7 +109,10 @@ class JoinPlanner:
     Heuristics are deterministic and documented via ``JoinPlan.reasons``:
 
     * tiny cross products run the ``naive`` oracle (no artifact pays off);
-    * multi-device meshes get the ``ring`` driver;
+    * multi-device meshes get ``sharded-indexed`` when the same
+      ``indexed_cells`` / ``indexed_min_tau`` conditions hold that justify
+      the index on one device (per-device token slabs beat re-walking the
+      grid on every device), and the ``ring`` sweep otherwise;
     * single-device workloads whose grid exceeds ``indexed_cells`` at a
       threshold high enough for selective prefixes (``tau >=
       indexed_min_tau``, normalised similarities only) get the ``indexed``
@@ -176,9 +186,22 @@ class JoinPlanner:
                 reasons.append("ppjoin: prefer=cpu (positional filter is the "
                                "best general-purpose CPU prefix algorithm)")
         elif n_devices > 1:
-            driver = "ring"
-            reasons.append(f"ring: {n_devices} devices available; R shards "
-                           f"stay resident, S circulates via collective_permute")
+            if (sim != OVERLAP and tau >= self.indexed_min_tau
+                    and cells > self.indexed_cells):
+                driver = "sharded-indexed"
+                reasons.append(
+                    f"sharded-indexed: {n_devices} devices and {cells} cells "
+                    f"> indexed_cells={self.indexed_cells} at tau={tau} >= "
+                    f"{self.indexed_min_tau} (selective prefixes); the CSR "
+                    f"postings shard into per-device token slabs, so "
+                    f"candidate generation scales with devices instead of "
+                    f"re-walking the grid")
+            else:
+                driver = "ring"
+                reasons.append(
+                    f"ring: {n_devices} devices available; R shards stay "
+                    f"resident, S circulates via collective_permute "
+                    f"(grid too small or tau too low for sharded postings)")
         elif (sim != OVERLAP and tau >= self.indexed_min_tau
               and cells > self.indexed_cells):
             driver = "indexed"

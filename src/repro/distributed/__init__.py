@@ -1,4 +1,10 @@
-"""Distributed runtime: sharded checkpointing, fault tolerance, elasticity."""
+"""Distributed runtime: sharded checkpointing, fault tolerance, elasticity,
+and the mesh-sharded inverted-index join driver (``"sharded-indexed"``,
+:mod:`repro.distributed.sharded_index`)."""
 
 from repro.distributed.checkpoint import CheckpointManager
 from repro.distributed.fault import FaultTolerantRunner, RunnerConfig
+from repro.distributed.sharded_index import (
+    sharded_indexed_bitmap_join,
+    sharded_indexed_join_prepared,
+)

@@ -1,0 +1,297 @@
+"""The ``"sharded-indexed"`` join driver: the sub-quadratic inverted-index
+candidate path (:mod:`repro.index`) composed with the device mesh.
+
+The ring driver shards the *dense grid*: every device still bitmap-evaluates
+its |R|/n × |S| slice, so adding devices divides quadratic work without
+changing its asymptotics.  This driver shards the *index* instead — the
+established route to distributed set-similarity joins (cf. the MapReduce
+filter-and-verification-tree R-S join and Christiani et al.'s scalable set
+similarity join in PAPERS.md):
+
+* **Build** — the corpus-side CSR postings index is cut into contiguous
+  frequency-ordered *token slabs*, one per device, balanced by postings
+  volume (:func:`repro.index.postings.partition_postings`, cached on the
+  :class:`~repro.core.engine.PreparedCollection` with a
+  ``builds["sharded_postings"]`` counter).  Every device also holds the full
+  R token/length/bitmap arrays — verification is row-local, only candidate
+  *generation* is sharded.
+* **Probe** — probe chunks are broadcast (replicated) into one ``shard_map``
+  step per chunk; each device runs the *same* traced stages as the
+  single-device indexed driver (:func:`repro.index.candidates.
+  expand_and_filter` → :func:`~repro.index.candidates.dedup_pairs`) against
+  its slab: the sentinel-padded slab arrays make out-of-slab tokens expand
+  to nothing, so per-shard expansions partition the global expansion
+  exactly.
+* **Reduce** — a capacity-aware allgather-compact: per-shard survivor
+  buffers are ``all_gather``-ed, *globally* re-deduplicated (the same
+  ``dedup_pairs`` stage — a pair generated via tokens on two different
+  slabs must count once), and each device takes an equal ``cap``-slot slice
+  of the compacted unique list for bitmap verdict + exact verification
+  (:func:`~repro.index.candidates.verdict_and_verify`).  The slice split
+  rebalances verification even when one slab is hot, and makes the
+  per-shard funnel counters *sum* to the single-device driver's counters
+  bit for bit.
+* **Escalate** — the overflow contract is the single-device driver's,
+  preserved: a chunk whose exact host-prepass expansion exceeds a forced
+  ``capacity`` (or the auto-capacity ceiling) is re-run on the dense grid
+  path and recorded in ``JoinStats.overflow_blocks``.  The trigger is the
+  *total* chunk expansion — identical to the indexed driver's — so the
+  sharded funnel stays bit-identical to the single-device one under any
+  capacity (the conformance acceptance bar).
+
+``JoinStats`` is the sum of the per-device funnel counters
+(``postings_expanded`` / ``candidates_generated`` / ``candidates`` /
+``verified_true``), which the shard-count-invariance test pins to the
+single-device indexed driver's stats for 1/2/4/8 shards.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core import expected, verify
+from repro.core.collection import Collection, split_join_args
+from repro.core.constants import BITMAP_COMBINED, JACCARD, PAD_TOKEN
+from repro.core.engine import PreparedCollection, as_prepared
+from repro.core.join import JoinStats, _bucket_capacity
+from repro.distributed.sharding import join_axes
+from repro.index.candidates import (
+    _MAX_AUTO_CAPACITY,
+    _dense_chunk_fallback,
+    _pad_chunk,
+    dedup_pairs,
+    expand_and_filter,
+    finish_pairs,
+    probe_prefix_lengths,
+    verdict_and_verify,
+)
+from repro.index.postings import shard_expansion_counts
+
+
+@functools.lru_cache(maxsize=256)
+def _sharded_chunk_fn(mesh, axes, *, sim: str, tau: float, cap: int, lp: int,
+                      scale: int, self_join: bool, cutoff: int, impl: str):
+    """Compile (once per static config) the per-chunk shard_map step.
+
+    The returned jitted callable runs stage 1+2 per slab, the
+    allgather-compact reduce, and stage 3 on each device's slice of the
+    globally deduped candidate list.  Memoized so repeated probes — and the
+    conformance sweep — reuse compiled executables instead of re-tracing a
+    fresh ``shard_map`` closure per call (the jit cache then keys on input
+    shapes as usual).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis_name = axes if len(axes) > 1 else axes[0]
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def local(post_set, post_pos, post_len, post_key, vocab, vocab_tid,
+              tokens_r, lengths_r, words_r,
+              probe_tokens, probe_lengths, probe_words, probe_prefix,
+              lo_r, hi_r, need_tab, s0):
+        # Slab arrays arrive (1, pmax): drop the shard dim.
+        post_set, post_pos, post_len, post_key = (
+            post_set[0], post_pos[0], post_len[0], post_key[0])
+        my = jnp.int32(0)
+        for a in axes:  # row-major rank along the (possibly composite) axes
+            my = my * mesh.shape[a] + jax.lax.axis_index(a)
+
+        # Stages 1+2 on my token slab (identical code to the single-device
+        # chunk step; the slab view owns a subset of the tokens).
+        rr, ss, n_exp = expand_and_filter(
+            post_set, post_pos, post_len, post_key, vocab, vocab_tid,
+            probe_tokens, probe_lengths, probe_prefix, lo_r, hi_r, s0,
+            sim=sim, tau=tau, cap=cap, lp=lp, scale=scale,
+            self_join=self_join, impl=impl)
+        cand_r, cand_s, _n_local = dedup_pairs(rr, ss, cap)
+
+        # Allgather-compact reduce: every device re-deduplicates the union
+        # (a pair reachable via two slabs must count once), then takes an
+        # equal slice of the unique list — verification is rebalanced
+        # across the mesh regardless of slab skew.
+        g_r = jax.lax.all_gather(cand_r, axis_name).reshape(-1)
+        g_s = jax.lax.all_gather(cand_s, axis_name).reshape(-1)
+        u_r, u_s, n_gen = dedup_pairs(g_r, g_s, n_dev * cap)
+        start = my * cap
+        sl_r = jax.lax.dynamic_slice(u_r, (start,), (cap,))
+        sl_s = jax.lax.dynamic_slice(u_s, (start,), (cap,))
+        slot_ok = (start + jnp.arange(cap, dtype=jnp.int32)) < n_gen
+        n_slice = jnp.sum(slot_ok, dtype=jnp.int32)
+
+        # Stage 3 on my slice (full R arrays are replicated: verification
+        # is row-local).
+        pairs, n_bm, n_ok = verdict_and_verify(
+            tokens_r, lengths_r, words_r, probe_tokens, probe_lengths,
+            probe_words, sl_r, sl_s, slot_ok, need_tab, s0,
+            sim=sim, tau=tau, cutoff=cutoff, impl=impl)
+        counters = jnp.stack([n_exp, n_slice, n_bm, n_ok])[None]  # (1, 4)
+        return pairs, counters
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes),) * 4 + (P(),) * 13,
+        out_specs=(P(axes), P(axes)),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def sharded_indexed_join_prepared(
+    prep_r: PreparedCollection,
+    prep_s: PreparedCollection | None = None,
+    *,
+    mesh,
+    axis=None,
+    sim: str = JACCARD,
+    tau: float = 0.8,
+    b: int = 128,
+    method: str = BITMAP_COMBINED,
+    mix: bool = False,
+    ell: int = 1,
+    probe_block: int = 4096,
+    impl: str = "auto",
+    use_cutoff: bool = True,
+    capacity: int | None = None,
+    return_stats: bool = False,
+):
+    """Index-driven exact join sharded over a device mesh.
+
+    The drop-in mesh twin of :func:`repro.index.candidates.
+    indexed_join_prepared`: same knobs plus ``mesh``/``axis`` (``axis=None``
+    shards over all mesh axes), same self-join contract (self-join ONLY when
+    ``prep_s`` is omitted), same return shape, and — by construction — the
+    bit-identical pair set *and* summed ``JoinStats`` for any shard count,
+    probe block and capacity.
+
+    ``capacity`` bounds each device's buffers; a chunk whose exact total
+    expansion exceeds it escalates to the dense grid path
+    (``JoinStats.overflow_blocks``), the same per-(device, chunk) contract
+    and the same trigger as the single-device driver, so forced-overflow
+    runs stay conformant too.
+    """
+    axes, _axis_name, n_dev = join_axes(mesh, axis)
+    self_join = prep_s is None
+    if self_join:
+        prep_s = prep_r
+    chosen = bm.choose_method(tau, b) if method == BITMAP_COMBINED else method
+    cutoff = (expected.cutoff_point(chosen, b, float(tau)) if use_cutoff
+              else 1 << 30)
+    nr, ns = prep_r.num_sets, prep_s.num_sets
+    stats = JoinStats()
+
+    def _finish(pairs_list):
+        pairs = finish_pairs(prep_r, prep_s, self_join, pairs_list)
+        return (pairs, stats) if return_stats else pairs
+
+    sharded = prep_r.sharded_postings(sim, tau, ell, n_dev)
+    post = sharded.base
+    ps_np, lp = probe_prefix_lengths(prep_s, sim, tau)
+    if nr == 0 or ns == 0 or post.num_postings == 0 or lp == 0:
+        return _finish([])
+
+    tokens_r, lengths_r = prep_r.device_arrays()
+    words_r = prep_r.bitmap_words(b, chosen, mix=mix)
+    if self_join:
+        tokens_s, lengths_s, words_s = tokens_r, lengths_r, words_r
+    else:
+        tokens_s, lengths_s = prep_s.device_arrays()
+        words_s = prep_s.bitmap_words(b, chosen, mix=mix)
+    lo_np, hi_np, lo_d, hi_d = prep_s.length_window_int(sim, tau)
+    ps_d = jnp.asarray(ps_np)
+    slabs = sharded.device_arrays()
+    vocab_d, tid_d = post.device_arrays()[:2]
+    scale = post.max_len + 1
+    need_tab = verify.min_overlap_table_dev(
+        sim, float(tau), prep_r.max_len, prep_s.max_len)
+
+    cb = int(probe_block)
+    pairs_out: list[np.ndarray] = []
+    for c0 in range(0, ns, cb):
+        c1 = min(c0 + cb, ns)
+        stats.blocks_total += 1
+        per_shard = shard_expansion_counts(
+            sharded, prep_s.tokens[c0:c1], ps_np[c0:c1],
+            lo_np[c0:c1], hi_np[c0:c1], lp)
+        n_exp = int(per_shard.sum())
+        stats.postings_expanded += n_exp
+        if n_exp == 0:
+            stats.blocks_skipped += 1
+            continue
+        if capacity is None:
+            cap = min(_bucket_capacity(int(per_shard.max())),
+                      nr * (c1 - c0) * lp)
+        else:
+            cap = int(capacity)
+        if (capacity is not None and n_exp > cap) or n_exp > _MAX_AUTO_CAPACITY:
+            # Escalation trigger == the single-device driver's (total chunk
+            # expansion vs the forced capacity / auto ceiling): the funnel
+            # stays bit-identical under overflow, and no per-shard buffer
+            # can silently truncate on the fast path (shard counts are
+            # bounded by the total).
+            stats.overflow_blocks += 1
+            n_win, n_bm, vpairs = _dense_chunk_fallback(
+                tokens_r, lengths_r, words_r,
+                tokens_s[c0:c1], lengths_s[c0:c1], words_s[c0:c1],
+                np.asarray(lo_d[c0:c1]), np.asarray(hi_d[c0:c1]), c0,
+                sim=sim, tau=tau, cutoff=cutoff, impl=impl,
+                self_join=self_join)
+            stats.total_pairs += n_win
+            stats.candidates_generated += n_win
+            stats.candidates += n_bm
+            stats.verified_true += len(vpairs)
+            if len(vpairs):
+                pairs_out.append(vpairs)
+            continue
+        step = _sharded_chunk_fn(
+            mesh, axes, sim=sim, tau=float(tau), cap=cap, lp=lp, scale=scale,
+            self_join=self_join, cutoff=int(cutoff), impl=impl)
+        pairs_d, counters_d = step(
+            *slabs, vocab_d, tid_d, tokens_r, lengths_r, words_r,
+            _pad_chunk(tokens_s[c0:c1], cb, PAD_TOKEN),
+            _pad_chunk(lengths_s[c0:c1], cb, 0),
+            _pad_chunk(words_s[c0:c1], cb, 0),
+            _pad_chunk(ps_d[c0:c1], cb, 0),
+            _pad_chunk(lo_d[c0:c1], cb, 0), _pad_chunk(hi_d[c0:c1], cb, 0),
+            need_tab, jnp.int32(c0))
+        counters = np.asarray(counters_d)  # (n_dev, 4)
+        pairs_np = np.asarray(pairs_d).reshape(n_dev, cap, 2)
+        # Summed per-shard funnel == the single-device chunk counters: the
+        # slab expansions partition the chunk's, the slice counts partition
+        # the globally deduped candidate list.
+        stats.total_pairs += int(counters[:, 1].sum())
+        stats.candidates_generated += int(counters[:, 1].sum())
+        stats.candidates += int(counters[:, 2].sum())
+        stats.verified_true += int(counters[:, 3].sum())
+        for d in range(n_dev):
+            k = int(counters[d, 3])
+            if k:
+                pairs_out.append(pairs_np[d, :k].astype(np.int64))
+
+    return _finish(pairs_out)
+
+
+def sharded_indexed_bitmap_join(
+    col_r: Collection | PreparedCollection,
+    col_s: Collection | PreparedCollection | str | None = None,
+    sim: str = JACCARD,
+    tau: float = 0.8,
+    *,
+    mesh,
+    axis=None,
+    **kwargs,
+):
+    """Collection-level wrapper of :func:`sharded_indexed_join_prepared`
+    (the ``blocked_bitmap_join`` calling convention; plain collections are
+    prepared on the spot, prepared ones reuse their caches — including the
+    sharded postings slabs)."""
+    col_s, sim, tau = split_join_args(col_s, sim, tau)
+    return sharded_indexed_join_prepared(
+        as_prepared(col_r), None if col_s is None else as_prepared(col_s),
+        mesh=mesh, axis=axis, sim=sim, tau=tau, **kwargs)

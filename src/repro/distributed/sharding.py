@@ -22,6 +22,32 @@ import numpy as np
 _TLS = threading.local()
 
 
+def join_axes(mesh, axis=None):
+    """Resolve a mesh + axis spec for the distributed join drivers.
+
+    ``axis`` may be a single axis name, a tuple of names, or ``None`` (all
+    of the mesh's axes).  Returns ``(axes, axis_name, n_dev)``: the
+    normalized axes tuple, the name to hand to collectives (the tuple
+    itself when composite, the bare string otherwise — what
+    ``ppermute``/``all_gather``/``axis_index`` expect), and the device
+    count along those axes.  Shared by ``ring_join*`` and the
+    ``sharded-indexed`` driver so every mesh consumer normalizes the same
+    way.
+    """
+    if axis is None:
+        axes = tuple(mesh.axis_names)
+    elif isinstance(axis, str):
+        axes = (axis,)
+    else:
+        axes = tuple(axis)
+    for a in axes:
+        if a not in mesh.shape:
+            raise ValueError(f"axis {a!r} not in mesh axes {mesh.axis_names}")
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
+    axis_name = axes if len(axes) > 1 else axes[0]
+    return axes, axis_name, n_dev
+
+
 @contextmanager
 def activation_sharding(mesh, batch_axes: Tuple[str, ...] = ("pod", "data"),
                         tp_axis: str = "model", seq_parallel: bool = False):

@@ -95,46 +95,31 @@ def _expansion_count_host(post, tokens_np, ps_np, lo_np, hi_np,
     capacity and guards it: a pathological chunk (hot token × huge window)
     whose expansion would wrap int32 or exhaust device memory is detected
     *before* anything is allocated and escalated to the dense fallback.
+    (``scale`` is implied by ``post``; kept for call-site symmetry with the
+    device step.)
     """
-    if post.num_tokens == 0:
-        return 0
-    ptoks = tokens_np[:, :lp].astype(np.int64)
-    j = np.clip(np.searchsorted(post.vocab, ptoks), 0, post.num_tokens - 1)
-    found = post.vocab[j].astype(np.int64) == ptoks
-    tid = np.where(found, post.vocab_tid[j], 0).astype(np.int64)
-    evalid = found & (np.arange(lp)[None, :] < ps_np[:, None])
-    base = tid * scale
-    lo_c = np.clip(lo_np.astype(np.int64), 0, scale - 1)[:, None]
-    hi_c = np.clip(hi_np.astype(np.int64), 0, scale - 1)[:, None]
-    a = np.searchsorted(post.post_key, base + lo_c, side="left")
-    b = np.searchsorted(post.post_key, base + hi_c, side="right")
-    return int(np.where(evalid, np.maximum(b - a, 0), 0).sum())
+    from repro.index.postings import lookup_counts_host
+
+    cnt, _tid, valid = lookup_counts_host(
+        post, tokens_np, ps_np, lo_np, hi_np, lp)
+    return int(cnt[valid].sum())
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("sim", "tau", "cap", "lp", "scale", "self_join",
-                     "cutoff", "impl"),
-)
-def _indexed_chunk_step(
-    tokens_r, lengths_r, words_r,
-    vocab, vocab_tid, post_set, post_pos, post_len, post_key,
-    probe_tokens, probe_lengths, probe_words, probe_prefix, lo_r, hi_r,
-    need_tab, s0,
+def expand_and_filter(
+    post_set, post_pos, post_len, post_key, vocab, vocab_tid,
+    probe_tokens, probe_lengths, probe_prefix, lo_r, hi_r, s0,
     *, sim: str, tau: float, cap: int, lp: int, scale: int, self_join: bool,
-    cutoff: int, impl: str,
+    impl: str,
 ):
-    """One fused candidate-generation + verification step for a probe chunk.
+    """Traced stage 1: CSR expansion + per-entry admission filters over one
+    postings *view* — the full index, or one token slab of a
+    :class:`~repro.index.postings.ShardedPostings` (the arrays are
+    interchangeable: slab tails carry sentinel keys, so the same windowed
+    ``searchsorted`` sees count 0 for tokens the view does not own).
 
-    Expansion, entry filters, sort-dedup, pairwise bitmap verdict and exact
-    verification all stay on device; the host receives the compacted
-    ``(cap, 2)`` verified-pair buffer plus four scalars.
-
-    Returns ``(pairs, n_expanded, n_generated, n_bitmap, n_verified)``:
-    pairs are ``(r_sorted, s_sorted)`` ids (slots ``>= n_verified`` are
-    garbage); ``n_expanded > cap`` means the entry stream was truncated and
-    the caller must escalate this chunk (it pre-checks via the count
-    prepass, so this only happens under an explicitly forced capacity).
+    Returns ``(rr, ss, n_expanded)``: sentinel-keyed entry streams (pruned
+    slots hold ``_INT32_MAX``) ready for :func:`dedup_pairs`, plus the exact
+    expansion count of this view.
     """
     c = probe_tokens.shape[0]
 
@@ -163,10 +148,23 @@ def _indexed_chunk_step(
         r_idx, s0 + s_loc, in_range,
         sim=sim, tau=tau, self_join=self_join, impl=impl)
 
-    # -- deduplicate: lexsort (probe, set) pairs, keep uniques, compact ----
-    # (two int32 sort keys rather than one fused int64 key: x64 stays off)
     rr = jnp.where(keep, r_idx, _INT32_MAX)
     ss = jnp.where(keep, s_loc, _INT32_MAX)
+    return rr, ss, n_expanded
+
+
+def dedup_pairs(rr, ss, cap: int):
+    """Traced stage 2: lexsort sentinel-keyed ``(probe, set)`` entries, keep
+    uniques, compact into a ``cap``-slot buffer.
+
+    ``rr`` / ``ss`` may be any length (a chunk's entry stream, or shard
+    buffers gathered across the mesh); pruned/padding slots must hold
+    ``_INT32_MAX``.  Returns ``(cand_r, cand_s, n_generated)`` with slots
+    ``>= n_generated`` holding ``_INT32_MAX`` again — the output composes
+    with itself, which is exactly how the sharded driver re-deduplicates
+    the allgathered per-shard buffers.
+    """
+    # (two int32 sort keys rather than one fused int64 key: x64 stays off)
     order = jnp.lexsort((rr, ss))  # s major, r minor; pruned slots sort last
     sr = rr[order]
     s2 = ss[order]
@@ -174,26 +172,85 @@ def _indexed_chunk_step(
         [jnp.ones((1,), dtype=bool), (s2[1:] != s2[:-1]) | (sr[1:] != sr[:-1])])
     n_generated = jnp.sum(uniq, dtype=jnp.int32)
     ui = jnp.nonzero(uniq, size=cap, fill_value=0)[0]
-    cand_r = sr[ui]
-    cand_s = s2[ui]
     slot_ok = jnp.arange(cap) < n_generated
+    cand_r = jnp.where(slot_ok, sr[ui], _INT32_MAX)
+    cand_s = jnp.where(slot_ok, s2[ui], _INT32_MAX)
+    return cand_r, cand_s, n_generated
 
-    # -- verify: pairwise bitmap verdict, then exact overlap ---------------
+
+def verdict_and_verify(
+    tokens_r, lengths_r, words_r, probe_tokens, probe_lengths, probe_words,
+    cand_r, cand_s, slot_ok, need_tab, s0,
+    *, sim: str, tau: float, cutoff: int, impl: str,
+):
+    """Traced stage 3: pairwise bitmap verdict → exact overlap verification
+    → verified-only compaction, over a compacted candidate buffer (a whole
+    chunk's, or one device's slice of the globally deduped list).
+
+    Returns ``(pairs, n_bitmap, n_verified)``; pair slots ``>= n_verified``
+    are garbage.
+    """
+    cap = cand_r.shape[0]
+    safe_r = jnp.where(slot_ok, cand_r, 0)
+    safe_s = jnp.where(slot_ok, cand_s, 0)
     bm_pass = kops.pair_verdict(
-        words_r[cand_r], probe_words[cand_s],
-        lengths_r[cand_r], probe_lengths[cand_s],
+        words_r[safe_r], probe_words[safe_s],
+        lengths_r[safe_r], probe_lengths[safe_s],
         sim=sim, tau=tau, cutoff=cutoff, impl=impl)
     cand_mask = slot_ok & bm_pass
     n_bitmap = jnp.sum(cand_mask, dtype=jnp.int32)
-    o = verify.pairwise_overlap(tokens_r[cand_r], probe_tokens[cand_s])
+    o = verify.pairwise_overlap(tokens_r[safe_r], probe_tokens[safe_s])
     # Integer-exact acceptance (min_overlap_table) — identical to the
     # f64 oracle; f32 thresholds are prune-only in this driver too.
     need = bounds.min_overlap_gather(
-        sim, need_tab, lengths_r[cand_r], probe_lengths[cand_s])
+        sim, need_tab, lengths_r[safe_r], probe_lengths[safe_s])
     ok = cand_mask & (o >= need)
     n_verified = jnp.sum(ok, dtype=jnp.int32)
     vi = jnp.nonzero(ok, size=cap, fill_value=0)[0]
-    pairs = jnp.stack([cand_r[vi], cand_s[vi] + s0], axis=1)
+    pairs = jnp.stack([safe_r[vi], safe_s[vi] + s0], axis=1)
+    return pairs, n_bitmap, n_verified
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sim", "tau", "cap", "lp", "scale", "self_join",
+                     "cutoff", "impl"),
+)
+def _indexed_chunk_step(
+    tokens_r, lengths_r, words_r,
+    vocab, vocab_tid, post_set, post_pos, post_len, post_key,
+    probe_tokens, probe_lengths, probe_words, probe_prefix, lo_r, hi_r,
+    need_tab, s0,
+    *, sim: str, tau: float, cap: int, lp: int, scale: int, self_join: bool,
+    cutoff: int, impl: str,
+):
+    """One fused candidate-generation + verification step for a probe chunk:
+    the three traced stages (:func:`expand_and_filter` → :func:`dedup_pairs`
+    → :func:`verdict_and_verify`) composed under a single jit.  The sharded
+    driver (:mod:`repro.distributed.sharded_index`) composes the *same*
+    stages per shard inside ``shard_map`` — one code path, two meshes.
+
+    Expansion, entry filters, sort-dedup, pairwise bitmap verdict and exact
+    verification all stay on device; the host receives the compacted
+    ``(cap, 2)`` verified-pair buffer plus four scalars.
+
+    Returns ``(pairs, n_expanded, n_generated, n_bitmap, n_verified)``:
+    pairs are ``(r_sorted, s_sorted)`` ids (slots ``>= n_verified`` are
+    garbage); ``n_expanded > cap`` means the entry stream was truncated and
+    the caller must escalate this chunk (it pre-checks via the count
+    prepass, so this only happens under an explicitly forced capacity).
+    """
+    rr, ss, n_expanded = expand_and_filter(
+        post_set, post_pos, post_len, post_key, vocab, vocab_tid,
+        probe_tokens, probe_lengths, probe_prefix, lo_r, hi_r, s0,
+        sim=sim, tau=tau, cap=cap, lp=lp, scale=scale, self_join=self_join,
+        impl=impl)
+    cand_r, cand_s, n_generated = dedup_pairs(rr, ss, cap)
+    slot_ok = jnp.arange(cap) < n_generated
+    pairs, n_bitmap, n_verified = verdict_and_verify(
+        tokens_r, lengths_r, words_r, probe_tokens, probe_lengths,
+        probe_words, cand_r, cand_s, slot_ok, need_tab, s0,
+        sim=sim, tau=tau, cutoff=cutoff, impl=impl)
     return pairs, n_expanded, n_generated, n_bitmap, n_verified
 
 
@@ -235,6 +292,41 @@ def _pad_chunk(a, rows: int, fill):
         return a
     widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
     return jnp.pad(a, widths, constant_values=fill)
+
+
+def probe_prefix_lengths(prep_s, sim: str, tau: float):
+    """1-prefix schema lengths per probe row -> ``(ps_np int32[N], lp)``.
+
+    Probe prefixes use the 1-prefix schema regardless of the index's ℓ (an
+    ℓ-prefix index is a superset of the 1-prefix one, so matches are only
+    ever added, never lost).  Shared by the single-device and sharded
+    drivers so both expand the identical lookup set.
+    """
+    ns = prep_s.num_sets
+    ps_np = np.zeros(ns, dtype=np.int32)
+    nz = prep_s.lengths > 0
+    if nz.any():
+        ps_np[nz] = bounds.prefix_length(
+            sim, tau, prep_s.lengths[nz].astype(np.int64)).astype(np.int32)
+    return ps_np, int(ps_np.max(initial=0))
+
+
+def finish_pairs(prep_r, prep_s, self_join: bool, pairs_list) -> np.ndarray:
+    """Concatenate sorted-space chunk pair buffers, remap through the
+    prepared orders to *original* indices, canonicalize (i < j for a
+    self-join) and lexsort — every index-driven driver's epilogue."""
+    if pairs_list:
+        pairs = np.concatenate(pairs_list, axis=0)
+        gi = prep_r.order[pairs[:, 0]]
+        gj = prep_s.order[pairs[:, 1]]
+        if self_join:
+            pairs = np.stack([np.minimum(gi, gj), np.maximum(gi, gj)],
+                             axis=1)
+        else:
+            pairs = np.stack([gi, gj], axis=1)
+        pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
+        return pairs.astype(np.int64)
+    return np.zeros((0, 2), dtype=np.int64)
 
 
 def indexed_join_prepared(
@@ -282,31 +374,11 @@ def indexed_join_prepared(
     stats = JoinStats()
 
     def _finish(pairs_list):
-        if pairs_list:
-            pairs = np.concatenate(pairs_list, axis=0)
-            gi = prep_r.order[pairs[:, 0]]
-            gj = prep_s.order[pairs[:, 1]]
-            if self_join:
-                pairs = np.stack([np.minimum(gi, gj), np.maximum(gi, gj)],
-                                 axis=1)
-            else:
-                pairs = np.stack([gi, gj], axis=1)
-            pairs = pairs[np.lexsort((pairs[:, 1], pairs[:, 0]))]
-            pairs = pairs.astype(np.int64)
-        else:
-            pairs = np.zeros((0, 2), dtype=np.int64)
+        pairs = finish_pairs(prep_r, prep_s, self_join, pairs_list)
         return (pairs, stats) if return_stats else pairs
 
     post = prep_r.postings(sim, tau, ell)
-    # Probe prefixes use the 1-prefix schema regardless of the index's ℓ
-    # (an ℓ-prefix index is a superset of the 1-prefix one, so matches are
-    # only ever added, never lost).
-    ps_np = np.zeros(ns, dtype=np.int32)
-    nz = prep_s.lengths > 0
-    if nz.any():
-        ps_np[nz] = bounds.prefix_length(
-            sim, tau, prep_s.lengths[nz].astype(np.int64)).astype(np.int32)
-    lp = int(ps_np.max(initial=0))
+    ps_np, lp = probe_prefix_lengths(prep_s, sim, tau)
     if nr == 0 or ns == 0 or post.num_postings == 0 or lp == 0:
         return _finish([])
 

@@ -29,6 +29,17 @@ the device-friendly form the indexed join driver consumes:
 Instances are cached on the :class:`~repro.core.engine.PreparedCollection`
 per ``(sim, tau, ell)`` — see ``PreparedCollection.postings`` — with a
 ``builds["postings"]`` counter proving reuse.
+
+For multi-device meshes, :func:`partition_postings` re-cuts a compiled index
+into :class:`ShardedPostings`: contiguous *token-id slabs* (dense
+frequency-ordered ids), one per device, balanced by postings volume.  Token
+slabs — not set-id ranges — are the unit of sharding because the composite
+``post_key`` stays locally searchable inside each slab: every device runs
+the *same* windowed ``searchsorted`` lookup against its slab and sees count
+0 for tokens it does not own, so the per-shard expansions partition the
+global expansion exactly.  :func:`shard_expansion_counts` is the host
+(int64-exact) per-shard count prepass the ``"sharded-indexed"`` driver
+sizes its per-device capacities from.
 """
 
 from __future__ import annotations
@@ -162,3 +173,146 @@ def build_postings(prep, sim: str, tau: float, ell: int = 1) -> PostingsIndex:
         post_len=post_len.astype(np.int32),
         post_key=post_key.astype(np.int32),
         prefix_len=p.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Token-slab partitioning (the "sharded-indexed" driver's build artifact)
+# ---------------------------------------------------------------------------
+
+# Padding sentinel for per-slab post_key tails.  build_postings guarantees
+# every real key satisfies key <= num_tokens * (max_len + 1) - 1 < INT32_MAX
+# (it raises when the key space would reach INT32_MAX), and the windowed
+# lookup's upper probe is num_tokens * scale - 1 at most, so sentinel slots
+# can never fall inside a searchsorted range.
+_KEY_SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+@dataclasses.dataclass
+class ShardedPostings:
+    """A :class:`PostingsIndex` re-cut into contiguous token-id slabs.
+
+    ``post_*[k]`` hold shard ``k``'s postings (padded to a common width with
+    ``_KEY_SENTINEL`` keys, so the same windowed ``searchsorted`` lookup
+    works unchanged per slab); ``slab_tid[k] : slab_tid[k + 1]`` is the dense
+    token-id range shard ``k`` owns, chosen so postings volume — not token
+    count — balances across shards.  ``vocab`` / ``vocab_tid`` stay global
+    (replicated): probe-side token lookup is identical on every device.
+    """
+
+    base: PostingsIndex
+    n_shards: int
+    slab_tid: np.ndarray    # int64[n_shards + 1] dense-token-id boundaries
+    counts: np.ndarray      # int64[n_shards] real postings per slab
+    post_set: np.ndarray    # int32[n_shards, pmax]
+    post_pos: np.ndarray    # int32[n_shards, pmax]
+    post_len: np.ndarray    # int32[n_shards, pmax]
+    post_key: np.ndarray    # int32[n_shards, pmax]; sentinel-padded tails
+    _device: Optional[Tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def slab_width(self) -> int:
+        return int(self.post_set.shape[1])
+
+    def device_arrays(self):
+        """(post_set, post_pos, post_len, post_key) stacked per shard as jnp
+        device arrays, cached (the shard_map inputs with the sharded spec)."""
+        if self._device is None:
+            import jax.numpy as jnp
+            self._device = tuple(jnp.asarray(a) for a in (
+                self.post_set, self.post_pos, self.post_len, self.post_key))
+        return self._device
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"ShardedPostings(n_shards={self.n_shards}, "
+                f"width={self.slab_width}, counts={self.counts.tolist()})")
+
+
+def partition_postings(post: PostingsIndex, n_shards: int) -> ShardedPostings:
+    """Cut a compiled postings index into ``n_shards`` contiguous token slabs.
+
+    Boundaries come from the CSR row offsets: slab ``k`` starts at the first
+    token whose cumulative postings count reaches ``k / n_shards`` of the
+    total, so slabs are balanced by *postings volume* (a hot token still
+    lands wholly in one slab — tokens are atomic; the per-shard count
+    prepass and overflow escalation absorb that skew, tested by the
+    hot-slab multidevice test).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    cum = post.starts.astype(np.int64)          # int32[V+1] row offsets
+    total = int(post.num_postings)
+    targets = (total * np.arange(n_shards + 1, dtype=np.int64)) // n_shards
+    slab_tid = np.searchsorted(cum, targets, side="left").astype(np.int64)
+    slab_tid[0] = 0
+    slab_tid[-1] = post.num_tokens
+    slab_tid = np.maximum.accumulate(slab_tid)
+    slab_post = cum[slab_tid]
+    counts = np.diff(slab_post)
+    pmax = max(int(counts.max(initial=0)), 1)
+
+    post_set = np.zeros((n_shards, pmax), dtype=np.int32)
+    post_pos = np.zeros((n_shards, pmax), dtype=np.int32)
+    post_len = np.zeros((n_shards, pmax), dtype=np.int32)
+    post_key = np.full((n_shards, pmax), _KEY_SENTINEL, dtype=np.int32)
+    for k in range(n_shards):
+        sl = slice(int(slab_post[k]), int(slab_post[k + 1]))
+        w = int(counts[k])
+        post_set[k, :w] = post.post_set[sl]
+        post_pos[k, :w] = post.post_pos[sl]
+        post_len[k, :w] = post.post_len[sl]
+        post_key[k, :w] = post.post_key[sl]
+    return ShardedPostings(
+        base=post, n_shards=int(n_shards), slab_tid=slab_tid,
+        counts=counts, post_set=post_set, post_pos=post_pos,
+        post_len=post_len, post_key=post_key)
+
+
+def lookup_counts_host(post: PostingsIndex, tokens_np, ps_np, lo_np, hi_np,
+                       lp: int):
+    """Host (int64-exact) twin of the device windowed lookup.
+
+    Returns ``(cnt, tid, valid)``, each ``[C, lp]``: the window-surviving
+    postings count, the dense token id, and the lookup-validity mask per
+    ``(probe, prefix position)``.  Shared by the total count prepass
+    (``candidates._expansion_count_host``) and the per-shard one
+    (:func:`shard_expansion_counts`); both size capacities *and* guard the
+    fused step — a pathological expansion is detected before any device
+    buffer is allocated.
+    """
+    c = int(np.asarray(tokens_np).shape[0])
+    if post.num_tokens == 0 or lp == 0:
+        z = np.zeros((c, max(lp, 1)), dtype=np.int64)
+        return z, z.copy(), np.zeros_like(z, dtype=bool)
+    scale = post.max_len + 1
+    ptoks = np.asarray(tokens_np)[:, :lp].astype(np.int64)
+    j = np.clip(np.searchsorted(post.vocab, ptoks), 0, post.num_tokens - 1)
+    found = post.vocab[j].astype(np.int64) == ptoks
+    tid = np.where(found, post.vocab_tid[j], 0).astype(np.int64)
+    valid = found & (np.arange(lp)[None, :] < np.asarray(ps_np)[:, None])
+    base = tid * scale
+    lo_c = np.clip(np.asarray(lo_np).astype(np.int64), 0, scale - 1)[:, None]
+    hi_c = np.clip(np.asarray(hi_np).astype(np.int64), 0, scale - 1)[:, None]
+    a = np.searchsorted(post.post_key, base + lo_c, side="left")
+    b = np.searchsorted(post.post_key, base + hi_c, side="right")
+    cnt = np.where(valid, np.maximum(b - a, 0), 0).astype(np.int64)
+    return cnt, tid, valid
+
+
+def shard_expansion_counts(sharded: ShardedPostings, tokens_np, ps_np,
+                           lo_np, hi_np, lp: int) -> np.ndarray:
+    """Per-shard count prepass: how many window-surviving postings entries
+    this probe chunk expands to *on each token slab* (``int64[n_shards]``).
+
+    Token slabs are disjoint, so these partition the single-device count
+    exactly: ``shard_expansion_counts(...).sum()`` equals the unsharded
+    prepass total — asserted by the multidevice shard-count-invariance test.
+    """
+    cnt, tid, valid = lookup_counts_host(
+        sharded.base, tokens_np, ps_np, lo_np, hi_np, lp)
+    owner = np.clip(
+        np.searchsorted(sharded.slab_tid, tid, side="right") - 1,
+        0, sharded.n_shards - 1)
+    out = np.zeros(sharded.n_shards, dtype=np.int64)
+    np.add.at(out, owner[valid], cnt[valid])
+    return out

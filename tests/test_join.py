@@ -1,5 +1,7 @@
-"""Join correctness: blocked device join == naive oracle, exactly, across
-similarity functions, thresholds, bitmap methods and block sizes."""
+"""Blocked-join specifics: bitmap methods, cutoff toggles, stats sanity and
+the dedup pipeline.  The sim × τ oracle sweep that used to live here is now
+owned by the single conformance suite (``tests/test_driver_conformance.py``),
+which runs it for every registered driver from one grid."""
 
 import numpy as np
 import pytest
@@ -14,19 +16,6 @@ from repro.core.collection import from_lists, preprocess
 from repro.core.constants import BITMAP_METHODS
 from repro.data.collections import uniform_collection, with_duplicates
 from repro.data.dedup import dedup_collection
-
-
-@pytest.mark.parametrize("sim,tau", [
-    ("jaccard", 0.5), ("jaccard", 0.8), ("cosine", 0.7),
-    ("dice", 0.75), ("overlap", 6.0),
-])
-def test_blocked_join_equals_oracle(small_collection, sim, tau):
-    oracle = join.naive_join(small_collection, sim, tau)
-    got, stats = join.blocked_bitmap_join(
-        small_collection, sim, tau, b=64, block=64, return_stats=True)
-    assert np.array_equal(oracle, got), (sim, tau, len(oracle), len(got))
-    assert stats.verified_true == len(oracle)
-    assert 0.0 <= stats.filter_ratio <= 1.0
 
 
 @pytest.mark.parametrize("method", BITMAP_METHODS)

@@ -3,6 +3,9 @@ process keeps its single real device):
 
 * sharded train step on a (pod, data, model) mesh == single-device step;
 * distributed ring join == oracle pair set;
+* sharded-indexed join: shard-count invariance (pairs + summed funnel ==
+  the single-device indexed driver), forced per-shard overflow escalation,
+  hot-slab (uneven token partition) exactness;
 * elastic checkpoint restore onto a different mesh shape.
 """
 
@@ -264,6 +267,155 @@ got_self = join.ring_join_prepared(pr, mesh=mesh, axis="data",
                                    sim="jaccard", tau=0.7, b=64, method="xor")
 assert np.array_equal(got_self, oracle_self), (len(got_self), len(oracle_self))
 print("RING PREPARED OK", len(oracle), len(oracle_self))
+"""))
+
+
+def test_sharded_indexed_shard_count_invariance():
+    """The sharded-indexed driver on 1/2/4/8 token slabs must return the
+    bit-identical pair set AND summed funnel counters as the single-device
+    indexed driver — self-join and R×S — with the per-shard host count
+    prepass partitioning the unsharded expansion count exactly, the base
+    CSR built once (re-partitioned per shard count) and each partition
+    built once."""
+    print(_run(r"""
+import numpy as np, jax
+from repro.core import join
+from repro.core.engine import prepare
+from repro.core.collection import from_lists
+from repro.distributed.sharded_index import sharded_indexed_join_prepared
+from repro.index import indexed_join_prepared
+from repro.index.candidates import probe_prefix_lengths
+from repro.index.postings import shard_expansion_counts
+from repro.launch.mesh import make_mesh
+
+rng = np.random.default_rng(23)
+base = [rng.choice(90, size=rng.integers(2, 12), replace=False).tolist() for _ in range(16)]
+sets = []
+for _ in range(64):
+    src = base[int(rng.integers(len(base)))]
+    sets.append([t for t in src if rng.random() > 0.12] or src[:1])
+col = from_lists(sets, pad_to=12)
+prep = prepare(col)
+oracle = join.naive_join(col, "jaccard", 0.7)
+assert len(oracle) > 10
+ref_pairs, ref_stats = indexed_join_prepared(prep, sim="jaccard", tau=0.7,
+                                             b=32, probe_block=16, return_stats=True)
+assert np.array_equal(ref_pairs, oracle)
+for n in (1, 2, 4, 8):
+    mesh = make_mesh((n,), ("data",))
+    got, stats = sharded_indexed_join_prepared(
+        prep, mesh=mesh, axis="data", sim="jaccard", tau=0.7, b=32,
+        probe_block=16, return_stats=True)
+    assert np.array_equal(got, ref_pairs), n
+    assert stats.to_dict() == ref_stats.to_dict(), (n, stats.to_dict(), ref_stats.to_dict())
+    # the per-shard count prepass partitions the unsharded expansion count
+    sharded = prep.sharded_postings("jaccard", 0.7, 1, n)
+    ps_np, lp = probe_prefix_lengths(prep, "jaccard", 0.7)
+    lo, hi, _, _ = prep.length_window_int("jaccard", 0.7)
+    per = shard_expansion_counts(sharded, prep.tokens, ps_np, lo, hi, lp)
+    assert per.shape == (n,) and int(per.sum()) == ref_stats.postings_expanded, (n, per)
+assert prep.builds["postings"] == 1, prep.builds          # base CSR shared
+assert prep.builds["sharded_postings"] == 4, prep.builds  # one partition per n
+
+# R×S flavour on 8 shards
+sets_s = [rng.choice(90, size=rng.integers(2, 12), replace=False).tolist() for _ in range(24)]
+for k in range(5):
+    sets_s[k] = sets[3 * k]
+ps = prepare(from_lists(sets_s, pad_to=12))
+orc = join.naive_join(col, ps.source, "jaccard", 0.6)
+assert len(orc) >= 5
+rp, rs = indexed_join_prepared(prep, ps, sim="jaccard", tau=0.6, b=32,
+                               probe_block=16, return_stats=True)
+gp, gs = sharded_indexed_join_prepared(prep, ps, mesh=make_mesh((8,), ("data",)),
+                                       axis="data", sim="jaccard", tau=0.6,
+                                       b=32, probe_block=16, return_stats=True)
+assert np.array_equal(rp, orc) and np.array_equal(gp, orc)
+assert gs.to_dict() == rs.to_dict(), (gs.to_dict(), rs.to_dict())
+print("SHARD COUNT INVARIANCE OK", len(oracle), len(orc))
+"""))
+
+
+def test_sharded_indexed_forced_overflow_escalates():
+    """Forced per-shard capacities 1-8 on a duplicate-heavy collection:
+    overflowing chunks must escalate to the dense path without losing a
+    single pair, keep the summed funnel bit-identical to the single-device
+    indexed driver at the same capacity, and actually trip the overflow
+    counter at the tiny caps."""
+    print(_run(r"""
+import numpy as np, jax
+from repro.core import join
+from repro.core.engine import prepare
+from repro.core.collection import from_lists
+from repro.distributed.sharded_index import sharded_indexed_join_prepared
+from repro.index import indexed_join_prepared
+from repro.launch.mesh import make_mesh
+
+rng = np.random.default_rng(31)
+base = [rng.choice(110, size=rng.integers(2, 13), replace=False).tolist() for _ in range(12)]
+sets = []
+for _ in range(48):
+    src = base[int(rng.integers(len(base)))]
+    sets.append([t for t in src if rng.random() > 0.15] or src[:1])
+col = from_lists(sets, pad_to=16)
+prep = prepare(col)
+mesh = make_mesh((8,), ("data",))
+saw_overflow = False
+for sim, tau in (("jaccard", 0.6), ("cosine", 0.8)):
+    oracle = join.naive_join(col, sim, tau)
+    assert len(oracle) > 0, (sim, tau)
+    for cap in range(1, 9):
+        got, stats = sharded_indexed_join_prepared(
+            prep, mesh=mesh, axis="data", sim=sim, tau=tau, b=32,
+            probe_block=16, capacity=cap, return_stats=True)
+        ref, rstats = indexed_join_prepared(
+            prep, sim=sim, tau=tau, b=32, probe_block=16, capacity=cap,
+            return_stats=True)
+        assert np.array_equal(got, oracle), (sim, tau, cap, len(got), len(oracle))
+        assert stats.to_dict() == rstats.to_dict(), (sim, tau, cap)
+        saw_overflow = saw_overflow or stats.overflow_blocks > 0
+assert saw_overflow  # the tiny caps did exercise the escalation
+print("SHARDED OVERFLOW OK")
+"""))
+
+
+def test_sharded_indexed_hot_slab_stays_exact():
+    """Uneven token-slab partitions: a zipf-hot token universe puts most of
+    the postings volume in a handful of tokens, so one slab is hot no
+    matter how the balancer cuts.  The allgather-compact reduce must keep
+    the result exact and the summed funnel identical to single-device."""
+    print(_run(r"""
+import numpy as np, jax
+from repro.core import join
+from repro.core.engine import prepare
+from repro.core.collection import from_lists
+from repro.distributed.sharded_index import sharded_indexed_join_prepared
+from repro.index import indexed_join_prepared
+from repro.launch.mesh import make_mesh
+
+rng = np.random.default_rng(41)
+sets = []
+for _ in range(72):
+    sz = int(rng.integers(2, 12))
+    toks = np.unique(np.minimum(rng.zipf(1.25, size=3 * sz + 6), 60))[:sz]
+    sets.append(toks.tolist())
+for i in range(0, 18, 3):  # planted duplicates -> non-empty joins
+    sets[i + 1] = sets[i]
+col = from_lists(sets, pad_to=12)
+prep = prepare(col)
+oracle = join.naive_join(col, "jaccard", 0.6)
+assert len(oracle) >= 6
+mesh = make_mesh((8,), ("data",))
+got, stats = sharded_indexed_join_prepared(
+    prep, mesh=mesh, axis="data", sim="jaccard", tau=0.6, b=32,
+    probe_block=16, return_stats=True)
+ref, rstats = indexed_join_prepared(prep, sim="jaccard", tau=0.6, b=32,
+                                    probe_block=16, return_stats=True)
+assert np.array_equal(got, oracle) and np.array_equal(ref, oracle)
+assert stats.to_dict() == rstats.to_dict()
+# the partition really is uneven: zipf postings cannot balance 8 ways
+sharded = prep.sharded_postings("jaccard", 0.6, 1, 8)
+assert sharded.counts.max() >= 2 * max(int(sharded.counts.min()), 1), sharded.counts
+print("HOT SLAB OK", sharded.counts.tolist())
 """))
 
 

@@ -1,6 +1,7 @@
-"""R×S two-collection joins: the blocked device join and all four CPU
-algorithms must return exactly the naive-oracle pair set, across every
-similarity function and threshold, with sane stats (filter_ratio ∈ [0, 1])."""
+"""R×S two-collection join specifics: calling conventions, empty inputs,
+length-range early-outs and the BitmapFilter integration.  The full sim × τ
+oracle sweep (blocked + every CPU algorithm) that used to drift here is now
+owned by the single conformance suite (``tests/test_driver_conformance.py``)."""
 
 import numpy as np
 import pytest
@@ -10,11 +11,6 @@ from repro.core.collection import from_lists, preprocess_rs
 from repro.core.filters import BitmapFilter
 
 ALGOS = list(cpu_algos.ALGORITHMS)
-
-# The acceptance grid: every similarity × τ ∈ {0.5, 0.8, 0.95} (overlap takes
-# an absolute threshold instead of a ratio).
-GRID = ([(s, t) for s in ("jaccard", "cosine", "dice") for t in (0.5, 0.8, 0.95)]
-        + [("overlap", 3.0), ("overlap", 6.0)])
 
 
 def _rs_collections(seed, n_r=60, n_s=45, universe=90, max_len=14, plant=4):
@@ -33,23 +29,16 @@ def rs_pair():
     return _rs_collections(seed=101)
 
 
-@pytest.mark.parametrize("sim,tau", GRID)
-def test_blocked_rs_equals_oracle(rs_pair, sim, tau):
-    col_r, col_s = rs_pair
-    oracle = join.naive_join(col_r, col_s, sim, tau)
-    got, stats = join.blocked_bitmap_join(
-        col_r, col_s, sim, tau, b=64, block=32, return_stats=True)
-    assert np.array_equal(oracle, got), (sim, tau, len(oracle), len(got))
-    assert stats.verified_true == len(oracle)
-    assert 0.0 <= stats.filter_ratio <= 1.0, stats
-    assert stats.candidates <= stats.total_pairs
-
-
+@pytest.mark.parametrize("sim,tau", [("jaccard", 0.7), ("cosine", 0.8),
+                                     ("dice", 0.6), ("overlap", 4.0)])
 @pytest.mark.parametrize("algo", ALGOS)
-@pytest.mark.parametrize("sim,tau", GRID)
-def test_cpu_algos_rs_equal_oracle(rs_pair, algo, sim, tau):
+def test_cpu_algos_rs_plain_equal_oracle(rs_pair, algo, sim, tau):
+    """No-bitmap CPU path, one τ per similarity — the conformance sweep
+    always plugs a bitmap in, so the bare prefix-filter route (including
+    overlap's absolute, non-ratio threshold) is pinned here."""
     col_r, col_s = rs_pair
     oracle = join.naive_join(col_r, col_s, sim, tau)
+    assert len(oracle) > 0, (sim, tau)
     got = cpu_algos.ALGORITHMS[algo](col_r, col_s, sim, tau)
     assert np.array_equal(oracle, got), (algo, sim, tau, len(oracle), len(got))
 
