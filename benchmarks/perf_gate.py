@@ -1,0 +1,182 @@
+"""Perf-regression gate over the BENCH_* trajectory.
+
+The trajectory JSON (appended by ``benchmarks.run --trajectory``) used to
+record history but protect nothing.  This module makes it a gate: the newest
+entry's gated kernel rows are compared against prior entries, and any row
+whose ``us_per_call`` regressed by more than the threshold ratio fails the
+run — ``scripts/check.sh`` invokes it right after the benchmark smoke, so a
+slowed hot-path kernel turns the whole check red.
+
+Rules, designed for noisy wall-clock timings on a shared CPU container:
+
+* only rows whose names start with one of ``GATED_PREFIXES`` are gated (the
+  three hot paths of the indexed funnel plus the dense hamming kernel);
+* the baseline is the *minimum* ``us_per_call`` over the last ``LOOKBACK``
+  prior entries that contain the same row name and the same ``smoke`` flag
+  (smoke and full runs use different shapes — row names embed the shape, so
+  they can never alias, and the flag keeps entry row-sets comparable);
+* a row with no prior baseline is reported as ``new`` and skipped with a
+  warning, never failed — the first run after adding a kernel (or starting a
+  fresh ``BENCH_PR*.json``) establishes the baseline;
+* baselines faster than ``MIN_PRIOR_US`` are timer noise and skipped;
+* ``REPRO_PERF_GATE_RATIO`` overrides the 1.3x threshold, and setting
+  ``REPRO_PERF_GATE_WAIVE=1`` downgrades failures to warnings (the escape
+  hatch for intentional trade-offs — record why in the PR).
+
+Also prints a one-line-per-row roofline summary (achieved-vs-peak bytes,
+bottleneck term, measured-vs-bound gap) from the roofline stats that
+``bench_kernels`` attaches to each row.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from typing import List, Optional
+
+from benchmarks.run import default_trajectory
+
+DEFAULT_RATIO = 1.3
+LOOKBACK = 3
+MIN_PRIOR_US = 50.0
+GATED_PREFIXES = (
+    "kernel_pair_verdict",
+    "kernel_entry_filter",
+    "kernel_indexed_chunk",
+    "kernel_hamming",
+)
+RATIO_ENV = "REPRO_PERF_GATE_RATIO"
+WAIVE_ENV = "REPRO_PERF_GATE_WAIVE"
+
+
+@dataclasses.dataclass
+class Verdict:
+    name: str
+    us: float
+    baseline_us: Optional[float]   # None -> no prior entry had this row
+    ratio: Optional[float]
+    status: str                    # "ok" | "fail" | "new" | "noise"
+    roofline: Optional[dict] = None
+
+    def line(self) -> str:
+        base = ("baseline=none" if self.baseline_us is None
+                else f"baseline={self.baseline_us:.1f}us "
+                     f"ratio={self.ratio:.2f}")
+        roof = ""
+        if self.roofline:
+            r = self.roofline
+            roof = (f" | roofline: bytes={r['hbm_bytes']:.3g} "
+                    f"flops={r['flops']:.3g} "
+                    f"ach_bytes={r['achieved_bytes_s']:.3g}B/s "
+                    f"bottleneck={r['bottleneck']} gap={r['gap']:.3g}")
+        return (f"{self.status.upper():5s} {self.name}: "
+                f"{self.us:.1f}us {base}{roof}")
+
+
+def load_trajectory(path: str) -> list:
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            loaded = json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return []
+    return loaded if isinstance(loaded, list) else []
+
+
+def _gated_rows(entry: dict) -> dict:
+    out = {}
+    for row in entry.get("rows", []):
+        name = row.get("name", "")
+        if any(name.startswith(p) for p in GATED_PREFIXES):
+            out[name] = row
+    return out
+
+
+def check_trajectory(history: list, ratio: float = DEFAULT_RATIO) -> List[Verdict]:
+    """Gate the newest entry against prior same-smoke entries.
+
+    Returns one :class:`Verdict` per gated row of the newest entry; an empty
+    list means the trajectory has no entries (or none with gated rows).
+    """
+    if not history:
+        return []
+    current = history[-1]
+    priors = [e for e in history[:-1]
+              if e.get("smoke") == current.get("smoke")][-LOOKBACK:]
+    verdicts = []
+    for name, row in sorted(_gated_rows(current).items()):
+        us = float(row["us_per_call"])
+        roof = (row.get("stats") or {}).get("roofline")
+        prior_us = [float(r["us_per_call"])
+                    for e in priors for r in e.get("rows", [])
+                    if r.get("name") == name]
+        if not prior_us:
+            verdicts.append(Verdict(name, us, None, None, "new", roof))
+            continue
+        base = min(prior_us)
+        r = us / base if base > 0 else float("inf")
+        if base < MIN_PRIOR_US:
+            verdicts.append(Verdict(name, us, base, r, "noise", roof))
+        elif r > ratio:
+            verdicts.append(Verdict(name, us, base, r, "fail", roof))
+        else:
+            verdicts.append(Verdict(name, us, base, r, "ok", roof))
+    return verdicts
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    path = None
+    for a in argv:
+        if a == "--trajectory":
+            path = default_trajectory()
+        elif a.startswith("--trajectory="):
+            path = a.split("=", 1)[1] or default_trajectory()
+        else:
+            raise SystemExit(f"unknown argument {a!r}")
+    if path is None:
+        path = default_trajectory()
+    ratio = float(os.environ.get(RATIO_ENV, DEFAULT_RATIO))
+    waive = bool(os.environ.get(WAIVE_ENV))
+
+    history = load_trajectory(path)
+    if not history:
+        print(f"perf-gate: SKIP — no trajectory entries at {path}")
+        return 0
+    verdicts = check_trajectory(history, ratio)
+    if not verdicts:
+        print(f"perf-gate: SKIP — newest entry in {path} has no gated rows "
+              f"(prefixes: {', '.join(GATED_PREFIXES)})")
+        return 0
+
+    print(f"perf-gate: {path} entry {len(history)} "
+          f"(smoke={history[-1].get('smoke')}), threshold {ratio:.2f}x, "
+          f"baseline = min of last {LOOKBACK} matching entries")
+    for v in verdicts:
+        print("  " + v.line())
+    failures = [v for v in verdicts if v.status == "fail"]
+    fresh = [v for v in verdicts if v.status == "new"]
+    if fresh and len(fresh) == len(verdicts):
+        print("perf-gate: SKIP — no prior trajectory entry with matching "
+              "row names (baseline established by this run)")
+        return 0
+    if failures:
+        names = ", ".join(v.name for v in failures)
+        if waive:
+            print(f"perf-gate: WAIVED {len(failures)} regression(s) "
+                  f"({names}) — {WAIVE_ENV} is set")
+            return 0
+        print(f"perf-gate: FAIL — {len(failures)} gated row(s) regressed "
+              f">{ratio:.2f}x vs baseline: {names}")
+        print(f"perf-gate: waive intentionally with {WAIVE_ENV}=1, or adjust "
+              f"{RATIO_ENV}")
+        return 1
+    print("perf-gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,11 +16,20 @@ fi
 
 # Benchmark smoke; --json leaves a machine-readable JoinStats trail and
 # --trajectory appends this run's summary to the repo-root perf history
-# (BENCH_PR5.json by default, parameterized via REPRO_BENCH_TRAJECTORY) so
-# filter-ratio / perf trajectories accumulate across PRs.
+# (newest BENCH_PR*.json by default — no manual bump per PR; override via
+# REPRO_BENCH_TRAJECTORY) so filter-ratio / perf trajectories accumulate
+# across PRs.
 python -m benchmarks.run --smoke \
     --json "${REPRO_BENCH_JSON:-/tmp/repro_bench_smoke.json}" \
-    --trajectory "${REPRO_BENCH_TRAJECTORY:-BENCH_PR5.json}"
+    --trajectory="${REPRO_BENCH_TRAJECTORY:-}"
+
+# Perf-regression gate: compare this run's gated kernel rows (pair_verdict,
+# entry_filter, indexed chunk step, hamming) against the previous trajectory
+# entries and fail on >1.3x us_per_call regressions; prints the one-line
+# roofline summary (achieved-vs-peak bytes/flops, bottleneck) per row.
+# Skips with a warning when no prior entry has matching rows.  Waive an
+# intentional regression with REPRO_PERF_GATE_WAIVE=1.
+python -m benchmarks.perf_gate --trajectory="${REPRO_BENCH_TRAJECTORY:-}"
 
 # Compaction-path smoke: the device-resident join must reproduce the host
 # path's pairs exactly on a real R×S workload.

@@ -254,6 +254,68 @@ def _indexed_chunk_step(
     return pairs, n_expanded, n_generated, n_bitmap, n_verified
 
 
+def chunk_step_spec(
+    prep_r: "PreparedCollection",
+    prep_s: "PreparedCollection | None" = None,
+    *,
+    sim: str = JACCARD,
+    tau: float = 0.8,
+    b: int = 128,
+    method: str = BITMAP_COMBINED,
+    mix: bool = False,
+    ell: int = 1,
+    probe_block: int = 4096,
+    impl: str = "auto",
+    use_cutoff: bool = True,
+):
+    """Concrete ``(args, statics)`` for one fused chunk step over the first
+    probe chunk — exactly what :func:`indexed_join_prepared` dispatches, but
+    reified so callers can ``_indexed_chunk_step.lower(*args, **statics)``
+    (roofline/HLO analysis in ``benchmarks/bench_kernels.py``) or time the
+    compiled step in isolation.
+
+    Raises ``ValueError`` for a degenerate spec (empty index or zero prefix
+    lengths) where the driver would never dispatch the step at all.
+    """
+    self_join = prep_s is None
+    if self_join:
+        prep_s = prep_r
+    chosen = bm.choose_method(tau, b) if method == BITMAP_COMBINED else method
+    cutoff = (expected.cutoff_point(chosen, b, float(tau)) if use_cutoff
+              else 1 << 30)
+    post = prep_r.postings(sim, tau, ell)
+    ps_np, lp = probe_prefix_lengths(prep_s, sim, tau)
+    if post.num_postings == 0 or lp == 0:
+        raise ValueError("degenerate chunk spec: empty index or prefixes")
+    tokens_r, lengths_r = prep_r.device_arrays()
+    words_r = prep_r.bitmap_words(b, chosen, mix=mix)
+    tokens_s, lengths_s = prep_s.device_arrays()
+    words_s = prep_s.bitmap_words(b, chosen, mix=mix)
+    lo_np, hi_np, lo_d, hi_d = prep_s.length_window_int(sim, tau)
+    csr = post.device_arrays()
+    scale = post.max_len + 1
+    need_tab = verify.min_overlap_table_dev(
+        sim, float(tau), prep_r.max_len, prep_s.max_len)
+    cb = min(int(probe_block), prep_s.num_sets)
+    n_exp = _expansion_count_host(
+        post, prep_s.tokens[:cb], ps_np[:cb], lo_np[:cb], hi_np[:cb],
+        lp, scale)
+    cap = min(_bucket_capacity(max(n_exp, 1)), prep_r.num_sets * cb * lp)
+    ps_d = jnp.asarray(ps_np)
+    args = (
+        tokens_r, lengths_r, words_r, *csr,
+        _pad_chunk(tokens_s[:cb], cb, PAD_TOKEN),
+        _pad_chunk(lengths_s[:cb], cb, 0),
+        _pad_chunk(words_s[:cb], cb, 0),
+        _pad_chunk(ps_d[:cb], cb, 0),
+        _pad_chunk(lo_d[:cb], cb, 0), _pad_chunk(hi_d[:cb], cb, 0),
+        need_tab, jnp.int32(0),
+    )
+    statics = dict(sim=sim, tau=float(tau), cap=cap, lp=lp, scale=scale,
+                   self_join=self_join, cutoff=int(cutoff), impl=impl)
+    return args, statics
+
+
 def _dense_chunk_fallback(tokens_r, lengths_r, words_r, tokens_c, lengths_c,
                           words_c, lo_c, hi_c, s0, *, sim, tau, cutoff, impl,
                           self_join):

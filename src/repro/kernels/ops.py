@@ -9,7 +9,13 @@ Handles tile padding, implementation dispatch, and the CPU story:
   CPU so that benchmarks and the data pipeline stay fast in this container.
 
 ``impl='auto'`` resolves to: Pallas-SWAR for b < 512, Pallas-MXU-bitplane for
-b >= 512 on TPU; ref on CPU.
+b >= 512 on TPU; ref on CPU.  The pairwise (1-D candidate stream) ops have
+their own resolution (:func:`_resolve_pairwise_impl`): ``auto`` picks the
+candidate-major tiled SWAR kernel for b < 512 and the batched bit-plane MXU
+kernel for b >= 512 on TPU, so large-b candidate verdicts run on the
+systolic array just like the dense grid path; ``entry_filter`` (pure
+integer filtering, no bitmap words) maps the mxu impls to their elementwise
+equivalents.
 """
 
 from __future__ import annotations
@@ -206,15 +212,28 @@ def count_candidates(
 
 
 def _resolve_pairwise_impl(impl: str, b: int) -> str:
-    """Pairwise (1-D stream) kernels have no MXU formulation: the bitplane
-    trick needs an all-pairs matmul.  'mxu'/'ref_mxu' resolve to their
-    elementwise equivalents."""
-    impl = resolve_impl(impl, b)
-    if impl == "mxu":
-        return "swar"
-    if impl == "ref_mxu":
+    """Pairwise (1-D candidate stream) dispatch.
+
+    ``auto`` resolves to ref on CPU; on TPU to the candidate-major tiled
+    SWAR kernel for b < 512 and the batched bit-plane MXU kernel for
+    b >= 512 (the 1-D analogue of the dense grid dispatch — the pairwise
+    inner product is a batched ``dot_general``, so large-b verdicts run on
+    the systolic array too).  Explicit impls pass through unchanged.
+    """
+    if impl != "auto":
+        return impl
+    if not _on_tpu():
         return "ref"
-    return impl
+    return "mxu" if b >= 512 else "swar_tiled"
+
+
+def _resolve_entry_impl(impl: str) -> str:
+    """``entry_filter`` is pure integer filtering — there are no bitmap
+    words, hence no bit-plane formulation; the mxu impls resolve to their
+    elementwise equivalents (and ``swar_tiled`` to ``swar``: the kernel is
+    already a single vectorized pass per tile)."""
+    impl = resolve_impl(impl, 32)
+    return {"mxu": "swar", "ref_mxu": "ref", "swar_tiled": "swar"}.get(impl, impl)
 
 
 @functools.partial(
@@ -247,7 +266,7 @@ def entry_filter(
     padding/overrun slots.
     """
     (g,) = len_r.shape
-    impl = _resolve_pairwise_impl(impl, 32)
+    impl = _resolve_entry_impl(impl)
     if interpret is None:
         interpret = not _on_tpu()
     args = (len_r, pos_r, len_s, pos_s, lo, hi, idx_r, idx_s)
@@ -286,6 +305,12 @@ def pair_verdict(
     over *gathered* candidate rows (``words_r[g]`` vs ``words_s[g]``) instead
     of the dense cross product — the indexed driver's bitmap cost is
     proportional to G, not |R|·|S|.
+
+    Impls (all bit-identical, conformance-gated against ``ref``):
+    ``swar`` word-loop kernel, ``swar_tiled`` candidate-major streaming
+    kernel, ``mxu`` batched bit-plane kernel, plus the ``ref``/``ref_mxu``
+    pure-jnp oracles; ``auto`` picks per backend and b
+    (:func:`_resolve_pairwise_impl`).
     """
     g, w = words_r.shape
     impl = _resolve_pairwise_impl(impl, 32 * w)
@@ -294,13 +319,31 @@ def pair_verdict(
     if impl == "ref":
         return ref.pair_verdict_ref(words_r, words_s, len_r, len_s,
                                     sim=sim, tau=tau, cutoff=cutoff)
-    if impl != "swar":
+    if impl == "ref_mxu":
+        ham = ref.bitplane_pair_hamming_ref(
+            unpack_bits(words_r).astype(jnp.int8),
+            unpack_bits(words_s).astype(jnp.int8),
+            popcount_rows(words_r), popcount_rows(words_s))
+        return postings._verdict_from_hamming(
+            ham, len_r.astype(jnp.int32), len_s.astype(jnp.int32),
+            sim=sim, tau=tau, cutoff=cutoff)
+    plr = _pad_rows(len_r.astype(jnp.int32), tile)
+    pls = _pad_rows(len_s.astype(jnp.int32), tile)
+    if impl == "mxu":
+        pr = _pad_rows(words_r, tile)
+        ps = _pad_rows(words_s, tile)
+        out = postings.pair_verdict_bitplane_pallas(
+            unpack_bits(pr).astype(jnp.int8), unpack_bits(ps).astype(jnp.int8),
+            popcount_rows(pr), popcount_rows(ps), plr, pls,
+            sim=sim, tau=tau, cutoff=cutoff, tile=tile, interpret=interpret)
+        return out[:g]
+    if impl not in ("swar", "swar_tiled"):
         raise ValueError(f"unknown impl {impl!r}")
     pr = _pad_rows(words_r, tile)
     ps = _pad_rows(words_s, tile)
-    plr = _pad_rows(len_r.astype(jnp.int32), tile)
-    pls = _pad_rows(len_s.astype(jnp.int32), tile)
-    out = postings.pair_verdict_pallas(
+    kernel = (postings.pair_verdict_tiled_pallas if impl == "swar_tiled"
+              else postings.pair_verdict_pallas)
+    out = kernel(
         pr, ps, plr, pls, sim=sim, tau=tau, cutoff=cutoff, tile=tile,
         interpret=interpret)
     return out[:g]

@@ -19,7 +19,25 @@ regular, elementwise, and hot enough to deserve kernels:
   indexed driver's bitmap cost scale with *candidates generated* rather
   than grid cells.
 
-Both kernels are 1-D over the entry/candidate stream (tile rows of
+The pairwise verdict has three kernel formulations, selected via
+``ops.pair_verdict(impl=...)`` and all bit-identical to the ref oracle:
+
+* ``swar`` (:func:`pair_verdict_pallas`) — the original word-loop kernel:
+  ``fori_loop`` over the W packed words, one dynamic column slice per word.
+* ``swar_tiled`` (:func:`pair_verdict_tiled_pallas`) — candidate-major
+  tiling: each program XORs + popcounts its whole ``(tile, W)`` word block
+  in one vectorized pass (the words stream through VMEM exactly once per
+  tile, no per-word dynamic slicing) and reduces along the word axis.
+  This is the roofline-driven rewrite: the ``swar`` loop issues W dependent
+  dynamic slices per tile, the tiled form is a single streaming reduction.
+* ``mxu`` (:func:`pair_verdict_bitplane_pallas`) — batched bit-plane
+  form of :mod:`repro.kernels.bitplane` for the 1-D candidate stream:
+  ``popcount(x XOR y) = pc(x) + pc(y) - 2·<bits(x), bits(y)>`` with the
+  per-candidate inner product computed as a batched int8 ``dot_general``
+  (batch dim = candidates, contraction over the b bit planes) that lowers
+  onto the systolic array.
+
+All kernels are 1-D over the entry/candidate stream (tile rows of
 ``DEFAULT_TILE_1D``), validated against the pure-jnp oracles in
 :mod:`repro.kernels.ref` (``tests/test_postings_kernel.py``, interpret mode
 on CPU).
@@ -114,10 +132,10 @@ def _pairwise_hamming(r_words: jnp.ndarray, s_words: jnp.ndarray) -> jnp.ndarray
     return jax.lax.fori_loop(0, w, body, acc0)
 
 
-def _pair_verdict_body(r_words, s_words, lr, ls, *, sim: str, tau: float,
-                       cutoff: int):
-    """Pairwise bitmap-filter verdict (kernel body == ref oracle)."""
-    ham = _pairwise_hamming(r_words, s_words)
+def _verdict_from_hamming(ham, lr, ls, *, sim: str, tau: float, cutoff: int):
+    """Eq. 2 bound + Table 1 threshold + Alg. 7 cutoff, given the pairwise
+    Hamming distances — shared by every pairwise verdict kernel so the three
+    formulations differ only in how they compute ``ham``."""
     ub = (lr + ls - ham) // 2
     ub = jnp.minimum(ub, jnp.minimum(lr, ls))
     # Prune-side comparison -> epsilon-relaxed threshold (f32 may round up).
@@ -129,6 +147,13 @@ def _pair_verdict_body(r_words, s_words, lr, ls, *, sim: str, tau: float,
     cand = passed | over_cut
     cand &= (lr > 0) & (ls > 0)
     return cand
+
+
+def _pair_verdict_body(r_words, s_words, lr, ls, *, sim: str, tau: float,
+                       cutoff: int):
+    """Pairwise bitmap-filter verdict (kernel body == ref oracle)."""
+    ham = _pairwise_hamming(r_words, s_words)
+    return _verdict_from_hamming(ham, lr, ls, sim=sim, tau=tau, cutoff=cutoff)
 
 
 def _make_pair_verdict_kernel(sim: str, tau: float, cutoff: int):
@@ -176,3 +201,110 @@ def pair_verdict_pallas(
         out_shape=jax.ShapeDtypeStruct((g,), jnp.bool_),
         interpret=interpret,
     )(words_r, words_s, len_r, len_s)
+
+
+def _make_pair_verdict_tiled_kernel(sim: str, tau: float, cutoff: int):
+    def kernel(r_ref, s_ref, lr_ref, ls_ref, out_ref):
+        # Candidate-major: XOR + popcount the whole (tile, W) block at once —
+        # the packed words stream through VMEM exactly once per tile — then
+        # reduce along the word axis.  No per-word dynamic slicing.
+        ham = jnp.sum(_popcount32(r_ref[...] ^ s_ref[...]).astype(jnp.int32),
+                      axis=1)
+        out_ref[...] = _verdict_from_hamming(
+            ham, lr_ref[...].astype(jnp.int32), ls_ref[...].astype(jnp.int32),
+            sim=sim, tau=tau, cutoff=cutoff)
+
+    return kernel
+
+
+def pair_verdict_tiled_pallas(
+    words_r: jnp.ndarray,
+    words_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    *,
+    sim: str,
+    tau: float,
+    cutoff: int = 1 << 30,
+    tile: int = DEFAULT_TILE_1D,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Candidate-major tiled pairwise verdict -> bool[G] (same contract as
+    :func:`pair_verdict_pallas`; one vectorized streaming pass per tile)."""
+    g, w = words_r.shape
+    grid = (g // tile,)
+    kernel = _make_pair_verdict_tiled_kernel(sim, float(tau), int(cutoff))
+    vec_spec = pl.BlockSpec((tile,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, w), lambda i: (i, 0)),
+            pl.BlockSpec((tile, w), lambda i: (i, 0)),
+            vec_spec,
+            vec_spec,
+        ],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.bool_),
+        interpret=interpret,
+    )(words_r, words_s, len_r, len_s)
+
+
+def _make_pair_verdict_bitplane_kernel(sim: str, tau: float, cutoff: int):
+    def kernel(pr_ref, ps_ref, pcr_ref, pcs_ref, lr_ref, ls_ref, out_ref):
+        # Batched bit-plane inner product: batch dim = candidates,
+        # contraction over the b planes -> int32[tile] on the MXU.
+        dot = jax.lax.dot_general(
+            pr_ref[...],
+            ps_ref[...],
+            dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32,
+        )
+        ham = pcr_ref[...] + pcs_ref[...] - 2 * dot
+        out_ref[...] = _verdict_from_hamming(
+            ham, lr_ref[...].astype(jnp.int32), ls_ref[...].astype(jnp.int32),
+            sim=sim, tau=tau, cutoff=cutoff)
+
+    return kernel
+
+
+def pair_verdict_bitplane_pallas(
+    planes_r: jnp.ndarray,
+    planes_s: jnp.ndarray,
+    pc_r: jnp.ndarray,
+    pc_s: jnp.ndarray,
+    len_r: jnp.ndarray,
+    len_s: jnp.ndarray,
+    *,
+    sim: str,
+    tau: float,
+    cutoff: int = 1 << 30,
+    tile: int = DEFAULT_TILE_1D,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batched bit-plane (MXU) pairwise verdict -> bool[G].
+
+    ``planes_r``/``planes_s`` are unpacked {0,1} int8 bit planes (int8[G, b],
+    from :func:`repro.core.bitmap.unpack_bits`), ``pc_r``/``pc_s`` the
+    precomputed per-row popcounts — the 1-D candidate-stream analogue of
+    :func:`repro.kernels.bitplane.bitplane_hamming_pallas`.
+    """
+    g, b = planes_r.shape
+    grid = (g // tile,)
+    kernel = _make_pair_verdict_bitplane_kernel(sim, float(tau), int(cutoff))
+    vec_spec = pl.BlockSpec((tile,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, b), lambda i: (i, 0)),
+            pl.BlockSpec((tile, b), lambda i: (i, 0)),
+            vec_spec,
+            vec_spec,
+            vec_spec,
+            vec_spec,
+        ],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.bool_),
+        interpret=interpret,
+    )(planes_r, planes_s, pc_r, pc_s, len_r, len_s)

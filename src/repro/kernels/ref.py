@@ -25,6 +25,19 @@ def bitplane_hamming_ref(planes_r: jnp.ndarray, planes_s: jnp.ndarray,
     return pc_r[:, None] + pc_s[None, :] - 2 * dot
 
 
+def bitplane_pair_hamming_ref(planes_r: jnp.ndarray, planes_s: jnp.ndarray,
+                              pc_r: jnp.ndarray, pc_s: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise (1-D stream) bit-plane Hamming: int8[G, b] x2 -> int32[G].
+
+    Independent oracle of the batched-MXU pairwise kernel — the identity
+    ``popcount(x XOR y) = pc(x) + pc(y) - 2·<bits(x), bits(y)>`` evaluated
+    per candidate instead of all-pairs.
+    """
+    dot = jnp.einsum("gb,gb->g", planes_r.astype(jnp.int32),
+                     planes_s.astype(jnp.int32))
+    return pc_r + pc_s - 2 * dot
+
+
 # The Table 1 equivalent-overlap threshold lives in core.bounds; kernels, the
 # ring join and these oracles all share the same float32 helper.
 required_overlap_ref = bounds.required_overlap

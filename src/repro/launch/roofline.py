@@ -86,6 +86,71 @@ def compute_roofline(
     )
 
 
+@dataclasses.dataclass
+class KernelRoofline:
+    """Achieved-vs-peak report for one compiled kernel/step.
+
+    ``flops``/``hbm_bytes`` come from :func:`repro.launch.hlo_analysis.analyze`
+    over the compiled module; ``achieved_*`` divide them by the measured wall
+    time, and the ``*_frac`` columns compare that against the v5e-class peaks
+    above.  ``bound_us`` is the no-overlap roofline lower bound — the wall
+    time the program could not beat even at peak; ``gap`` = measured/bound is
+    the headroom the kernel leaves on the table (the number the tentpole
+    optimizations attack).  On a CPU container the fractions are tiny — the
+    point is the *relative* trajectory and the bottleneck term, not absolute
+    TPU numbers.
+    """
+    name: str
+    us_measured: float
+    flops: float
+    hbm_bytes: float
+    t_compute: float
+    t_memory: float
+    bottleneck: str
+    achieved_flops_s: float
+    achieved_bytes_s: float
+    flops_frac: float
+    bytes_frac: float
+    bound_us: float
+    gap: float
+
+    def columns(self) -> str:
+        """The roofline columns appended to a benchmark row's derived field."""
+        return (f"flops={self.flops:.3g} bytes={self.hbm_bytes:.3g} "
+                f"ach_flops={self.achieved_flops_s:.3g}/{PEAK_FLOPS:.3g} "
+                f"ach_bytes={self.achieved_bytes_s:.3g}/{HBM_BW:.3g} "
+                f"bottleneck={self.bottleneck} "
+                f"bound_us={self.bound_us:.1f} gap={self.gap:.3g}")
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def kernel_roofline(name: str, costs: HloCosts, us_measured: float) -> KernelRoofline:
+    """Roofline report for a single-device kernel: reuse the three-term model
+    (collective term is zero for kernels) against the measured wall time."""
+    r = compute_roofline(
+        arch="kernel", shape=name, mesh_name="1x1", n_devices=1,
+        costs=costs, model_flops=costs.flops)
+    sec = max(us_measured, 1e-3) / 1e6
+    bound = max(r.step_time_bound, 1e-30)
+    return KernelRoofline(
+        name=name,
+        us_measured=us_measured,
+        flops=costs.flops,
+        hbm_bytes=costs.hbm_bytes,
+        t_compute=r.t_compute,
+        t_memory=r.t_memory,
+        bottleneck=r.bottleneck,
+        achieved_flops_s=costs.flops / sec,
+        achieved_bytes_s=costs.hbm_bytes / sec,
+        flops_frac=(costs.flops / sec) / PEAK_FLOPS,
+        bytes_frac=(costs.hbm_bytes / sec) / HBM_BW,
+        bound_us=bound * 1e6,
+        gap=sec / bound,
+    )
+
+
 def model_flops_for(cfg, shape_spec, active_params: int) -> float:
     """MODEL_FLOPS per step (global): 6·N·D train, 2·N·D prefill, 2·N·B decode."""
     b, s = shape_spec.global_batch, shape_spec.seq_len

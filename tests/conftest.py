@@ -11,6 +11,43 @@ from repro.core.collection import from_lists, preprocess
 from repro.data.collections import uniform_collection, with_duplicates
 
 
+def _proc_int(path):
+    try:
+        with open(path) as f:
+            return int(f.read())
+    except (OSError, ValueError):
+        return None
+
+
+_MAP_CEILING = _proc_int("/proc/sys/vm/max_map_count")
+
+
+def _map_count() -> int:
+    try:
+        with open("/proc/self/maps", "rb") as f:
+            return sum(1 for _ in f)
+    except OSError:
+        return 0
+
+
+@pytest.fixture(autouse=True)
+def _relieve_map_pressure():
+    """Evict jax's executable caches before vm.max_map_count is exhausted.
+
+    Every distinct jit compile holds JIT code pages alive in the pjit cache;
+    a full tier-1 run accumulates enough executables that the process walks
+    into the kernel's memory-map ceiling and the *next* XLA compile mmap
+    segfaults the interpreter (observed reproducibly mid-suite on default
+    vm.max_map_count=65530 hosts).  Recompiles after an eviction are cheap;
+    a dead test process is not.  No-op off Linux.
+    """
+    yield
+    if _MAP_CEILING and _map_count() > 0.7 * _MAP_CEILING:
+        import jax
+
+        jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def small_collection():
     """~200 sets with planted near-duplicate clusters (non-empty join)."""

@@ -1,0 +1,201 @@
+"""Trajectory plumbing + perf-regression gate.
+
+Three contracts the benchmark stack's protection rests on:
+
+* ``benchmarks.run.parse_args`` — bare ``--trajectory`` must not swallow the
+  following token (it is a module filter, not a path; the old behaviour
+  silently wrote a file named after the filter in cwd);
+* ``benchmarks.run.append_trajectory`` — a corrupt history file is moved
+  aside (``.corrupt``), never silently replaced: the trajectory is the
+  cross-PR perf history the gate runs on;
+* ``benchmarks.perf_gate`` — regressions >ratio on gated rows fail, new rows
+  and noise-floor baselines skip, the env waiver downgrades to a warning.
+"""
+
+import json
+import os
+
+import pytest
+
+from benchmarks.common import Row
+from benchmarks import perf_gate
+from benchmarks.run import (append_trajectory, default_trajectory,
+                            parse_args)
+
+
+# ---------------------------------------------------------------------------
+# --trajectory argument parsing
+# ---------------------------------------------------------------------------
+
+def test_bare_trajectory_does_not_swallow_filters():
+    args = parse_args(["--trajectory", "bench_engine"])
+    assert args.trajectory_path == default_trajectory()
+    assert args.filters == ["bench_engine"]
+
+
+def test_explicit_trajectory_path_requires_equals(tmp_path):
+    p = str(tmp_path / "t.json")
+    args = parse_args([f"--trajectory={p}", "bench_kernels", "--smoke"])
+    assert args.trajectory_path == p
+    assert args.filters == ["bench_kernels"]
+    assert args.smoke
+
+
+def test_empty_trajectory_value_resolves_default():
+    args = parse_args(["--trajectory="])
+    assert args.trajectory_path == default_trajectory()
+
+
+def test_no_trajectory_flag_means_no_append():
+    args = parse_args(["bench_engine"])
+    assert args.trajectory_path is None
+    assert args.filters == ["bench_engine"]
+
+
+def test_json_forms_and_unknown_flag():
+    assert parse_args(["--json", "x.json"]).json_path == "x.json"
+    assert parse_args(["--json=y.json"]).json_path == "y.json"
+    with pytest.raises(SystemExit):
+        parse_args(["--json"])
+    with pytest.raises(SystemExit):
+        parse_args(["--frobnicate"])
+
+
+def test_default_trajectory_is_newest_bench_pr():
+    d = default_trajectory()
+    assert os.path.basename(d).startswith("BENCH_PR")
+    # The repo ships BENCH_PR3/4/5/7 — newest must win, without a manual bump.
+    import glob
+    import re
+    root = os.path.dirname(d)
+    nums = [int(re.fullmatch(r"BENCH_PR(\d+)\.json", os.path.basename(p)).group(1))
+            for p in glob.glob(os.path.join(root, "BENCH_PR*.json"))
+            if re.fullmatch(r"BENCH_PR(\d+)\.json", os.path.basename(p))]
+    assert os.path.basename(d) == f"BENCH_PR{max(nums)}.json"
+
+
+# ---------------------------------------------------------------------------
+# append_trajectory: corruption round trip
+# ---------------------------------------------------------------------------
+
+def _rows(us=100.0):
+    return [Row("kernel_pair_verdict_b128_g16384", us, "derived",
+                stats={"roofline": {"hbm_bytes": 1.0, "flops": 0.0,
+                                    "achieved_bytes_s": 1.0,
+                                    "bottleneck": "memory", "gap": 2.0}}),
+            Row("kernel_entry_filter_g131072", us * 2, "derived"),
+            Row("ungated_row", us, "derived")]
+
+
+def test_append_and_round_trip(tmp_path):
+    p = str(tmp_path / "traj.json")
+    assert append_trajectory(p, _rows(), smoke=True) == 1
+    assert append_trajectory(p, _rows(110.0), smoke=True) == 2
+    with open(p) as f:
+        hist = json.load(f)
+    assert [e["smoke"] for e in hist] == [True, True]
+    assert hist[1]["rows"][0]["us_per_call"] == 110.0
+    assert hist[0]["rows"][0]["stats"]["roofline"]["bottleneck"] == "memory"
+
+
+@pytest.mark.parametrize("garbage", ['{"truncated": [1, 2', '{"not": "a list"}'])
+def test_corrupt_trajectory_moved_aside_not_destroyed(tmp_path, garbage, capsys):
+    p = str(tmp_path / "traj.json")
+    with open(p, "w") as f:
+        f.write(garbage)
+    n = append_trajectory(p, _rows(), smoke=False)
+    assert n == 1
+    # the corrupt bytes survive under .corrupt; the new history is fresh
+    with open(p + ".corrupt") as f:
+        assert f.read() == garbage
+    with open(p) as f:
+        hist = json.load(f)
+    assert len(hist) == 1 and hist[0]["smoke"] is False
+    assert "moved aside" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# the gate itself
+# ---------------------------------------------------------------------------
+
+def _entry(us, smoke=True, name="kernel_pair_verdict_b128_g16384"):
+    return {"ts": "t", "rev": "r", "smoke": smoke,
+            "rows": [{"name": name, "us_per_call": us, "derived": ""}]}
+
+
+def test_gate_passes_within_threshold():
+    hist = [_entry(100.0), _entry(120.0)]
+    (v,) = perf_gate.check_trajectory(hist, ratio=1.3)
+    assert v.status == "ok" and v.ratio == pytest.approx(1.2)
+
+
+def test_gate_fails_on_regression():
+    hist = [_entry(100.0), _entry(140.0)]
+    (v,) = perf_gate.check_trajectory(hist, ratio=1.3)
+    assert v.status == "fail"
+    assert v.baseline_us == 100.0
+
+
+def test_gate_baseline_is_min_of_lookback():
+    # a noisy slow prior must not raise the baseline
+    hist = [_entry(100.0), _entry(500.0), _entry(125.0)]
+    (v,) = perf_gate.check_trajectory(hist, ratio=1.3)
+    assert v.status == "ok" and v.baseline_us == 100.0
+    # ... but only the last LOOKBACK priors count
+    hist = [_entry(50.0)] + [_entry(200.0)] * perf_gate.LOOKBACK + [_entry(200.0)]
+    (v,) = perf_gate.check_trajectory(hist, ratio=1.3)
+    assert v.baseline_us == 200.0
+
+
+def test_gate_ignores_other_smoke_flag_and_ungated_rows():
+    hist = [_entry(100.0, smoke=False), _entry(1000.0, smoke=True)]
+    (v,) = perf_gate.check_trajectory(hist, ratio=1.3)
+    assert v.status == "new"  # the smoke=False prior is not a baseline
+    hist = [_entry(100.0, name="bench_engine_row"),
+            _entry(1000.0, name="bench_engine_row")]
+    assert perf_gate.check_trajectory(hist, ratio=1.3) == []
+
+
+def test_gate_noise_floor_skips_tiny_baselines():
+    hist = [_entry(10.0), _entry(40.0)]
+    (v,) = perf_gate.check_trajectory(hist, ratio=1.3)
+    assert v.status == "noise"
+
+
+def _write(tmp_path, hist):
+    p = str(tmp_path / "traj.json")
+    with open(p, "w") as f:
+        json.dump(hist, f)
+    return p
+
+
+def test_main_exit_codes(tmp_path, monkeypatch, capsys):
+    monkeypatch.delenv(perf_gate.WAIVE_ENV, raising=False)
+    monkeypatch.delenv(perf_gate.RATIO_ENV, raising=False)
+    # regression -> 1
+    p = _write(tmp_path, [_entry(100.0), _entry(140.0)])
+    assert perf_gate.main([f"--trajectory={p}"]) == 1
+    assert "FAIL" in capsys.readouterr().out
+    # within threshold -> 0
+    p = _write(tmp_path, [_entry(100.0), _entry(110.0)])
+    assert perf_gate.main([f"--trajectory={p}"]) == 0
+    # no prior entries with matching rows -> skip-with-warning, 0
+    p = _write(tmp_path, [_entry(100.0)])
+    assert perf_gate.main([f"--trajectory={p}"]) == 0
+    assert "SKIP" in capsys.readouterr().out
+    # missing file -> skip, 0
+    assert perf_gate.main([f"--trajectory={tmp_path}/nope.json"]) == 0
+
+
+def test_main_waiver_env(tmp_path, monkeypatch, capsys):
+    p = _write(tmp_path, [_entry(100.0), _entry(200.0)])
+    monkeypatch.setenv(perf_gate.WAIVE_ENV, "1")
+    assert perf_gate.main([f"--trajectory={p}"]) == 0
+    assert "WAIVED" in capsys.readouterr().out
+
+
+def test_main_ratio_env(tmp_path, monkeypatch):
+    p = _write(tmp_path, [_entry(100.0), _entry(140.0)])
+    monkeypatch.delenv(perf_gate.WAIVE_ENV, raising=False)
+    monkeypatch.setenv(perf_gate.RATIO_ENV, "1.5")
+    assert perf_gate.main([f"--trajectory={p}"]) == 0
