@@ -28,6 +28,10 @@ class Row:
     us_per_call: float
     derived: str
     stats: Optional[dict] = None  # e.g. JoinStats.to_dict() — emitted as JSON
+    # Latency distribution (serving benches): round-tripped through the
+    # trajectory JSON so the perf gate can gate tail latency, not just means.
+    p50_us: Optional[float] = None
+    p99_us: Optional[float] = None
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
@@ -37,6 +41,10 @@ class Row:
              "derived": self.derived}
         if self.stats is not None:
             d["stats"] = self.stats
+        if self.p50_us is not None:
+            d["p50_us"] = self.p50_us
+        if self.p99_us is not None:
+            d["p99_us"] = self.p99_us
         return d
 
 

@@ -23,6 +23,15 @@ Rules, designed for noisy wall-clock timings on a shared CPU container:
   ``REPRO_PERF_GATE_WAIVE=1`` downgrades failures to warnings (the escape
   hatch for intentional trade-offs — record why in the PR).
 
+Beyond per-call microseconds, ``GATED_FIELDS`` gates named *fields* of
+matching rows — the serving rows carry ``stats.probes_per_sec``
+(higher-is-better: the comparison inverts, a drop below ``baseline/ratio``
+fails) and a top-level ``p99_us`` tail latency (lower-is-better, gated like
+``us_per_call`` with the same noise floor but a wider per-field margin —
+tail percentiles jitter more than means).  The baseline is the *best*
+prior value (max for throughput, min for latency) over the lookback window,
+so run-to-run jitter never ratchets the bar down.
+
 Also prints a one-line-per-row roofline summary (achieved-vs-peak bytes,
 bottleneck term, measured-vs-bound gap) from the roofline stats that
 ``bench_kernels`` attaches to each row.
@@ -47,6 +56,18 @@ GATED_PREFIXES = (
     "kernel_indexed_chunk",
     "kernel_hamming",
 )
+# (row-name prefix, field path, direction, margin).  "higher" inverts the
+# comparison: the metric regressing means it *dropped* (throughput);
+# "lower" gates like us_per_call (latency).  Dotted paths descend into the
+# row's ``stats`` dict.  ``margin`` multiplies the gate ratio for that
+# field: tail percentiles (p99 over a few hundred requests) jitter far more
+# run-to-run on a time-shared CPU than means do, and the baseline is the
+# best-ever prior — so the p99 gate only fires on a ~2x structural
+# regression, not scheduler noise.
+GATED_FIELDS = (
+    ("serve_sustained", "stats.probes_per_sec", "higher", 1.0),
+    ("serve_sustained", "p99_us", "lower", 1.5),
+)
 RATIO_ENV = "REPRO_PERF_GATE_RATIO"
 WAIVE_ENV = "REPRO_PERF_GATE_WAIVE"
 
@@ -54,15 +75,16 @@ WAIVE_ENV = "REPRO_PERF_GATE_WAIVE"
 @dataclasses.dataclass
 class Verdict:
     name: str
-    us: float
+    us: float                      # the gated value (unit may differ)
     baseline_us: Optional[float]   # None -> no prior entry had this row
-    ratio: Optional[float]
+    ratio: Optional[float]         # regression factor: >1 means worse
     status: str                    # "ok" | "fail" | "new" | "noise"
     roofline: Optional[dict] = None
+    unit: str = "us"
 
     def line(self) -> str:
         base = ("baseline=none" if self.baseline_us is None
-                else f"baseline={self.baseline_us:.1f}us "
+                else f"baseline={self.baseline_us:.1f}{self.unit} "
                      f"ratio={self.ratio:.2f}")
         roof = ""
         if self.roofline:
@@ -72,7 +94,7 @@ class Verdict:
                     f"ach_bytes={r['achieved_bytes_s']:.3g}B/s "
                     f"bottleneck={r['bottleneck']} gap={r['gap']:.3g}")
         return (f"{self.status.upper():5s} {self.name}: "
-                f"{self.us:.1f}us {base}{roof}")
+                f"{self.us:.1f}{self.unit} {base}{roof}")
 
 
 def load_trajectory(path: str) -> list:
@@ -95,11 +117,29 @@ def _gated_rows(entry: dict) -> dict:
     return out
 
 
+def _field_value(row: dict, path: str) -> Optional[float]:
+    cur: object = row
+    for part in path.split("."):
+        if not isinstance(cur, dict):
+            return None
+        cur = cur.get(part)
+    return float(cur) if isinstance(cur, (int, float)) else None
+
+
+def _field_unit(path: str) -> str:
+    if path.endswith("_us"):
+        return "us"
+    if path.endswith("_per_sec"):
+        return "/s"
+    return ""
+
+
 def check_trajectory(history: list, ratio: float = DEFAULT_RATIO) -> List[Verdict]:
     """Gate the newest entry against prior same-smoke entries.
 
-    Returns one :class:`Verdict` per gated row of the newest entry; an empty
-    list means the trajectory has no entries (or none with gated rows).
+    Returns one :class:`Verdict` per gated row of the newest entry (plus one
+    per gated *field*, named ``row[field]``); an empty list means the
+    trajectory has no entries (or none with gated rows).
     """
     if not history:
         return []
@@ -124,6 +164,45 @@ def check_trajectory(history: list, ratio: float = DEFAULT_RATIO) -> List[Verdic
             verdicts.append(Verdict(name, us, base, r, "fail", roof))
         else:
             verdicts.append(Verdict(name, us, base, r, "ok", roof))
+    verdicts.extend(_check_fields(current, priors, ratio))
+    return verdicts
+
+
+def _check_fields(current: dict, priors: list,
+                  ratio: float) -> List[Verdict]:
+    """Gate ``GATED_FIELDS`` metrics of the newest entry's matching rows."""
+    verdicts = []
+    for row in current.get("rows", []):
+        name = row.get("name", "")
+        for prefix, path, direction, margin in GATED_FIELDS:
+            if not name.startswith(prefix):
+                continue
+            value = _field_value(row, path)
+            if value is None:
+                continue
+            vname = f"{name}[{path}]"
+            unit = _field_unit(path)
+            prior = [v for e in priors for r in e.get("rows", [])
+                     if r.get("name") == name
+                     for v in [_field_value(r, path)] if v is not None]
+            if not prior:
+                verdicts.append(Verdict(vname, value, None, None, "new",
+                                        unit=unit))
+                continue
+            if direction == "higher":
+                # Throughput: baseline is the best (max) prior; the
+                # regression factor is how far we fell below it.
+                base = max(prior)
+                r = base / value if value > 0 else float("inf")
+                noise = base <= 0
+            else:
+                base = min(prior)
+                r = value / base if base > 0 else float("inf")
+                noise = unit == "us" and base < MIN_PRIOR_US
+            status = ("noise" if noise else
+                      "fail" if r > ratio * margin else "ok")
+            verdicts.append(Verdict(vname, value, base, r, status,
+                                    unit=unit))
     return verdicts
 
 

@@ -48,6 +48,7 @@ MODULES = [
     "benchmarks.bench_rs_join",            # R×S vs self-join
     "benchmarks.bench_engine",             # prepared-vs-rebuild amortization
     "benchmarks.bench_kernels",            # kernel rooflines (perf gate rows)
+    "benchmarks.bench_serve",              # online serving (coalesced probes)
 ]
 
 SMOKE_MODULES = [
@@ -55,6 +56,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_rs_join",
     "benchmarks.bench_engine",
     "benchmarks.bench_kernels",
+    "benchmarks.bench_serve",
 ]
 
 

@@ -50,6 +50,13 @@ python -m benchmarks.bench_engine --indexed-smoke
 # (builds["sharded_postings"] == 1) and both probes must match the oracle.
 python -m benchmarks.bench_engine --sharded-smoke
 
+# Serving smoke: a resident JoinSession coalesces a saturated request
+# stream into >=3 padded batches, the bucketed entrypoint cache shows zero
+# retraces after warmup (trace counters), every per-request pair list and
+# JoinStats is bit-identical to sequential JoinEngine.probe, and sustained
+# throughput is >=2x the per-request path.
+python -m benchmarks.bench_serve --smoke
+
 # Mesh conformance gate: re-run the single driver-conformance suite on an
 # 8-virtual-device harness, so multi-device regressions (ring and
 # sharded-indexed alike) are caught without hardware.  The sharded-indexed

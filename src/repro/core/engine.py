@@ -31,8 +31,9 @@ collection's indices (they remap through ``order``).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -266,12 +267,17 @@ class JoinEngine:
     (both recorded in ``fallbacks``).
     """
 
+    #: Default bound on the per-probe ``JoinStats`` history.  A long-lived
+    #: session probes millions of times; an unbounded list was a slow leak.
+    HISTORY_LIMIT = 1024
+
     def __init__(self, corpus: Collection | PreparedCollection,
                  sim: str = JACCARD, tau: float = 0.8, *,
                  plan: Optional[JoinPlan] = None,
                  planner: Optional[JoinPlanner] = None,
                  expected_batch: Optional[int] = None,
-                 mesh=None, axis=None):
+                 mesh=None, axis=None,
+                 history_limit: Optional[int] = None):
         self.prepared = prepare(corpus)
         self.sim = sim
         self.tau = float(tau)
@@ -284,8 +290,13 @@ class JoinEngine:
         self.mesh = mesh
         self.axis = axis
         self.probes = 0
-        self.history: List[object] = []   # JoinStats per probe
-        self.fallbacks: List[str] = []
+        if history_limit is None:
+            history_limit = self.HISTORY_LIMIT
+        # Bounded: keeps the newest `history_limit` JoinStats.  The rollup
+        # in stats_summary() accumulates over *all* probes regardless.
+        self.history: Deque[object] = collections.deque(maxlen=history_limit)
+        self.fallbacks: list = []
+        self._totals: Dict[str, int] = collections.defaultdict(int)
 
     # -- public API ----------------------------------------------------------
 
@@ -301,9 +312,39 @@ class JoinEngine:
         caches across repeated probes.
         """
         pairs, stats = self._execute(batch)
+        self.record_probe(stats)
+        return (pairs, stats) if return_stats else pairs
+
+    def record_probe(self, stats) -> None:
+        """Account one probe's :class:`~repro.core.join.JoinStats`: bump the
+        probe counter, append to the bounded history and fold the counters
+        into the lifetime rollup.  Called by :meth:`probe` and by the
+        serving layer (:mod:`repro.serve`) for coalesced probes it executes
+        outside this engine."""
         self.probes += 1
         self.history.append(stats)
-        return (pairs, stats) if return_stats else pairs
+        for field in ("total_pairs", "blocks_total", "blocks_skipped",
+                      "candidates", "verified_true", "overflow_blocks",
+                      "candidates_generated", "postings_expanded"):
+            self._totals[field] += getattr(stats, field, 0)
+
+    def stats_summary(self) -> Dict[str, object]:
+        """Lifetime rollup over every probe (not just the bounded history):
+        summed funnel counters plus derived ratios — the observability
+        surface a resident session reports instead of the raw per-probe
+        list."""
+        t = dict(self._totals)
+        total = t.get("total_pairs", 0)
+        cand = t.get("candidates", 0)
+        return {
+            "probes": self.probes,
+            "history_len": len(self.history),
+            "history_limit": self.history.maxlen,
+            "fallbacks": len(self.fallbacks),
+            **t,
+            "filter_ratio": (1.0 - cand / total) if total else 0.0,
+            "precision": (t.get("verified_true", 0) / cand) if cand else 1.0,
+        }
 
     def self_join(self, *, return_stats: bool = False):
         """The corpus joined against itself under this engine's plan."""

@@ -508,17 +508,41 @@ def _window_pair_mask(len_r: np.ndarray, len_s: np.ndarray, sim: str, tau: float
 # Distributed ring join (shard_map + collective_permute)
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=256)
+_RING_ENTRYPOINTS = None
+
+
+def _ring_entrypoint_cache():
+    """The ring driver's traced-factory cache — a
+    :class:`repro.serve.entrypoints.EntrypointCache` (lazy: ``repro.serve``
+    imports the engine, so the import happens at first probe, not at module
+    load)."""
+    global _RING_ENTRYPOINTS
+    if _RING_ENTRYPOINTS is None:
+        from repro.serve.entrypoints import EntrypointCache
+        _RING_ENTRYPOINTS = EntrypointCache(maxsize=256)
+    return _RING_ENTRYPOINTS
+
+
 def _ring_sweep_fn(mesh, axes, *, shard_r: int, shard_s: int, cap: int,
                    sim: str, tau: float, cutoff: int, impl: str,
                    rs_join: bool):
-    """Compile (once per static ring config) the jitted shard_map sweep.
-
-    Memoized so repeated ring joins with the same mesh/shape/knobs — the
-    engine's probe loop, the conformance sweep — reuse the compiled
-    executable instead of re-tracing a fresh closure per call; the jit
-    cache then keys on operand shapes as usual.
+    """Memoized traced factory for the ring sweep: repeated ring joins with
+    the same mesh/shape/knobs — the engine's probe loop, the conformance
+    sweep — reuse the compiled executable instead of re-tracing a fresh
+    closure per call (the jit cache then keys on operand shapes as usual).
     """
+    key = ("ring_sweep", mesh, axes, shard_r, shard_s, cap, sim, tau,
+           cutoff, impl, rs_join)
+    return _ring_entrypoint_cache().get(
+        key, lambda: _build_ring_sweep_fn(
+            mesh, axes, shard_r=shard_r, shard_s=shard_s, cap=cap, sim=sim,
+            tau=tau, cutoff=cutoff, impl=impl, rs_join=rs_join))
+
+
+def _build_ring_sweep_fn(mesh, axes, *, shard_r: int, shard_s: int, cap: int,
+                         sim: str, tau: float, cutoff: int, impl: str,
+                         rs_join: bool):
+    """Compile (once per static ring config) the jitted shard_map sweep."""
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 

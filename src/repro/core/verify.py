@@ -9,7 +9,9 @@ small and early exit matters).
 
 from __future__ import annotations
 
+import collections
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -40,13 +42,73 @@ def overlap_many(tokens: jnp.ndarray, idx_r: jnp.ndarray, idx_s: jnp.ndarray) ->
     return pairwise_overlap(tokens[idx_r], tokens[idx_s])
 
 
-@functools.lru_cache(maxsize=64)
+class _MinOverlapTableCache:
+    """Bounded LRU for device-resident min-overlap tables, safe under
+    concurrent probes.
+
+    ``functools.lru_cache`` keeps its *dict* consistent under CPython
+    threading, but two threads missing on the same key would both build and
+    upload the table — and a long-lived serving session
+    (:mod:`repro.serve`) probes from worker threads where that duplicated
+    upload is exactly the cost the cache exists to avoid.  This cache
+    double-checks under one lock (the table build itself happens outside
+    the lock so a slow upload never serializes unrelated probes) and counts
+    hits/misses, surfaced through ``JoinSession.stats_summary()``.
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self._lock = threading.Lock()
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, sim: str, tau: float, lmax_r: int, lmax_s: int):
+        key = (sim, float(tau), int(lmax_r), int(lmax_s))
+        with self._lock:
+            if key in self._data:
+                self.hits += 1
+                self._data.move_to_end(key)
+                return self._data[key]
+            self.misses += 1
+        # Build outside the lock: a concurrent miss on the same key wastes
+        # one duplicate upload at worst, but never blocks other keys.
+        table = jnp.asarray(bounds.min_overlap_table(sim, tau, lmax_r, lmax_s))
+        with self._lock:
+            if key not in self._data:
+                self._data[key] = table
+                while len(self._data) > self.maxsize:
+                    self._data.popitem(last=False)
+            return self._data[key]
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._data), "maxsize": self.maxsize}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self.hits = 0
+            self.misses = 0
+
+
+_TABLE_CACHE = _MinOverlapTableCache(maxsize=64)
+
+
 def min_overlap_table_dev(sim: str, tau: float, lmax_r: int, lmax_s: int):
-    """Device twin of ``bounds.min_overlap_table`` — cached (bounded LRU)
-    so repeated verify/probe calls — one per block pair in the blocked
-    host path, one per probe in the serving shape — do not re-upload the
-    same table.  Shared by every driver's verification site."""
-    return jnp.asarray(bounds.min_overlap_table(sim, tau, lmax_r, lmax_s))
+    """Device twin of ``bounds.min_overlap_table`` — cached (bounded,
+    lock-guarded LRU, see :class:`_MinOverlapTableCache`) so repeated
+    verify/probe calls — one per block pair in the blocked host path, one
+    per probe in the serving shape — do not re-upload the same table.
+    Shared by every driver's verification site."""
+    return _TABLE_CACHE.get(sim, tau, lmax_r, lmax_s)
+
+
+def min_overlap_cache_stats() -> dict:
+    """Hit/miss/entry counters of the min-overlap table cache (surfaced by
+    ``repro.serve.JoinSession.stats_summary``)."""
+    return _TABLE_CACHE.stats()
 
 
 _min_overlap_table_dev = min_overlap_table_dev  # internal alias

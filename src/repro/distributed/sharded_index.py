@@ -73,17 +73,42 @@ from repro.index.candidates import (
 from repro.index.postings import shard_expansion_counts
 
 
-@functools.lru_cache(maxsize=256)
+_SHARDED_ENTRYPOINTS = None
+
+
+def _sharded_entrypoint_cache():
+    """The sharded driver's traced-factory cache — a
+    :class:`repro.serve.entrypoints.EntrypointCache` (lazy import: the serve
+    package imports the engine)."""
+    global _SHARDED_ENTRYPOINTS
+    if _SHARDED_ENTRYPOINTS is None:
+        from repro.serve.entrypoints import EntrypointCache
+        _SHARDED_ENTRYPOINTS = EntrypointCache(maxsize=256)
+    return _SHARDED_ENTRYPOINTS
+
+
 def _sharded_chunk_fn(mesh, axes, *, sim: str, tau: float, cap: int, lp: int,
                       scale: int, self_join: bool, cutoff: int, impl: str):
+    """Memoized traced factory for the per-chunk shard_map step: repeated
+    probes — and the conformance sweep — reuse compiled executables instead
+    of re-tracing a fresh ``shard_map`` closure per call (the jit cache then
+    keys on input shapes as usual)."""
+    key = ("sharded_chunk", mesh, axes, sim, tau, cap, lp, scale, self_join,
+           cutoff, impl)
+    return _sharded_entrypoint_cache().get(
+        key, lambda: _build_sharded_chunk_fn(
+            mesh, axes, sim=sim, tau=tau, cap=cap, lp=lp, scale=scale,
+            self_join=self_join, cutoff=cutoff, impl=impl))
+
+
+def _build_sharded_chunk_fn(mesh, axes, *, sim: str, tau: float, cap: int,
+                            lp: int, scale: int, self_join: bool, cutoff: int,
+                            impl: str):
     """Compile (once per static config) the per-chunk shard_map step.
 
     The returned jitted callable runs stage 1+2 per slab, the
     allgather-compact reduce, and stage 3 on each device's slice of the
-    globally deduped candidate list.  Memoized so repeated probes — and the
-    conformance sweep — reuse compiled executables instead of re-tracing a
-    fresh ``shard_map`` closure per call (the jit cache then keys on input
-    shapes as usual).
+    globally deduped candidate list.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P

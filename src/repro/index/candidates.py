@@ -182,13 +182,17 @@ def verdict_and_verify(
     tokens_r, lengths_r, words_r, probe_tokens, probe_lengths, probe_words,
     cand_r, cand_s, slot_ok, need_tab, s0,
     *, sim: str, tau: float, cutoff: int, impl: str,
+    return_masks: bool = False,
 ):
     """Traced stage 3: pairwise bitmap verdict → exact overlap verification
     → verified-only compaction, over a compacted candidate buffer (a whole
     chunk's, or one device's slice of the globally deduped list).
 
     Returns ``(pairs, n_bitmap, n_verified)``; pair slots ``>= n_verified``
-    are garbage.
+    are garbage.  ``return_masks=True`` additionally returns the per-slot
+    bitmap-survivor and verified masks (``bool[cap]`` each) — the serving
+    layer (:mod:`repro.serve`) segment-sums them per probe row to recover
+    per-request funnel counters from a coalesced batch.
     """
     cap = cand_r.shape[0]
     safe_r = jnp.where(slot_ok, cand_r, 0)
@@ -208,6 +212,8 @@ def verdict_and_verify(
     n_verified = jnp.sum(ok, dtype=jnp.int32)
     vi = jnp.nonzero(ok, size=cap, fill_value=0)[0]
     pairs = jnp.stack([safe_r[vi], safe_s[vi] + s0], axis=1)
+    if return_masks:
+        return pairs, n_bitmap, n_verified, cand_mask, ok
     return pairs, n_bitmap, n_verified
 
 

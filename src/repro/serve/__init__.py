@@ -1,0 +1,16 @@
+"""Online serving layer: resident sessions, coalesced probe batching, and
+double-buffered transfer pipelining over the exact-join engine."""
+
+from repro.serve.coalescer import ProbeTicket, RequestCoalescer
+from repro.serve.entrypoints import EntrypointCache, pow2_bucket
+from repro.serve.session import JoinSession
+from repro.serve.transfer import TransferPool
+
+__all__ = [
+    "EntrypointCache",
+    "JoinSession",
+    "ProbeTicket",
+    "RequestCoalescer",
+    "TransferPool",
+    "pow2_bucket",
+]

@@ -1,0 +1,96 @@
+"""The bucketed entrypoint cache: one traced executable per (entrypoint,
+bucket) key, with trace counters that make "no retrace on steady state" an
+assertable property instead of a hope.
+
+The ring and sharded-indexed drivers memoize their traced factories
+(``core/join._ring_sweep_fn``, ``distributed/sharded_index.
+_sharded_chunk_fn``) through this cache — it is the generalization of the
+``functools.lru_cache`` they used to carry, shared with the serving layer:
+
+* a bounded, lock-guarded key → entrypoint map (``get``), where the builder
+  runs at most once per key;
+* a **trace counter** fed from *inside* the traced function
+  (:meth:`EntrypointCache.note_trace` is a host callback the builder embeds
+  in the jitted body, so it fires exactly when JAX traces — on the first
+  call per shape signature, and again only if something silently retraces);
+* :func:`pow2_bucket` — the padding policy that makes shape signatures
+  recur: probe batches are padded up to power-of-two row counts so each
+  ``(driver, sim, tau, bucket)`` traces exactly once for the life of the
+  session.
+
+``SERVE_ENTRYPOINTS`` in :mod:`repro.serve.session` asserts ``traces ==
+entries`` after warmup; the check.sh serve smoke pins it.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Dict, Hashable
+
+
+def pow2_bucket(n: int, floor: int = 1) -> int:
+    """Round ``n`` up to a power of two ``>= floor`` — the serving layer's
+    padding policy for probe-batch rows, prefix widths and candidate
+    capacities (same shape-bucketing idea as ``core.join._bucket_capacity``,
+    reusable for any dimension)."""
+    return max(int(floor), 1 << max(int(n) - 1, 0).bit_length())
+
+
+class EntrypointCache:
+    """Bounded key → traced-entrypoint cache with build and trace counters.
+
+    ``get(key, builder)`` returns the cached entrypoint, calling ``builder``
+    (zero-arg) at most once per key; eviction is LRU.  Builders that want
+    retraces *proven* absent call :meth:`note_trace` inside the function
+    they hand to ``jax.jit`` — the call runs at trace time only, so after
+    warmup ``stats()['traces']`` must stop moving (``== entries`` when every
+    key has exactly one shape signature).
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = int(maxsize)
+        self._lock = threading.Lock()
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.traces = 0
+        self.trace_counts: Dict[Hashable, int] = {}
+
+    def get(self, key: Hashable, builder: Callable[[], Callable]):
+        with self._lock:
+            if key in self._data:
+                self.hits += 1
+                self._data.move_to_end(key)
+                return self._data[key]
+            # Build under the lock: builders only *construct* the jitted
+            # callable (tracing is deferred to the first call), so this is
+            # cheap and deduplicates concurrent misses.
+            self.misses += 1
+            fn = builder()
+            self._data[key] = fn
+            while len(self._data) > self.maxsize:
+                evicted, _ = self._data.popitem(last=False)
+                self.trace_counts.pop(evicted, None)
+            return fn
+
+    def note_trace(self, key: Hashable) -> None:
+        """Record one trace of ``key``'s entrypoint.  Call this *inside* the
+        function handed to ``jax.jit`` — it executes only while JAX traces,
+        never on cached-executable dispatch."""
+        with self._lock:
+            self.traces += 1
+            self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._data), "hits": self.hits,
+                    "misses": self.misses, "traces": self.traces,
+                    "max_traces_per_key": max(self.trace_counts.values(),
+                                              default=0)}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self.trace_counts.clear()
+            self.hits = self.misses = self.traces = 0

@@ -1,0 +1,475 @@
+"""The resident join session: one prepared corpus held on device for the
+session's lifetime, probed by coalesced, padded, pipelined request batches.
+
+``JoinEngine.probe`` already amortizes the *build* (prepare R once); this
+layer amortizes the *serve*: every per-probe cost that is constant work —
+host round-trips, fresh traces for new batch sizes, serialized
+upload→join→download — is hoisted out of the request path:
+
+* **Resident session** — construction eagerly uploads every corpus-side
+  artifact (tokens/lengths, packed bitmap words, the postings CSR, the
+  min-overlap table) so no probe ever rebuilds or re-uploads them; the
+  ``PreparedCollection`` build counters prove it.
+* **Bucketed entrypoints** — merged batches are padded to power-of-two
+  buckets (rows, token width, prefix width, candidate capacity), so each
+  bucket traces exactly once (:class:`repro.serve.entrypoints.
+  EntrypointCache`; ``stats_summary()['entrypoints']['traces']`` is the
+  steady-state-no-retrace proof).
+* **Request coalescing** — the :class:`~repro.serve.coalescer.
+  RequestCoalescer` merges queued requests into one padded device batch
+  per group; per-request pair lists and ``JoinStats`` are scattered back
+  out **bit-identical to probing each request alone** (per-probe-row
+  funnel counters are segment-summed on device, so even the stats match
+  the solo run exactly — swept by ``tests/test_serve.py``).
+* **Double-buffered transfers** — batch N+1 is staged and ``device_put``
+  through the :class:`~repro.serve.transfer.TransferPool` and its step
+  dispatched *before* batch N's outputs are fetched, so upload overlaps
+  the in-flight join under JAX async dispatch (``pipeline_depth``).
+
+Exactness routing: the coalesced fast path serves a request iff its solo
+probe would run it as a single non-overflowing fused chunk — the session
+computes the same host count-prepass the driver would and routes anything
+else (oversized requests, forced-capacity overflows, pathological
+expansions, non-indexed plans) through ``JoinEngine.probe`` itself.  The
+fast path is therefore an optimization of a path that always exists, never
+a second semantics.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.core import bounds, expected, verify
+from repro.core.collection import Collection
+from repro.core.constants import BITMAP_COMBINED, JACCARD, PAD_TOKEN
+from repro.core.engine import JoinEngine, PreparedCollection, prepare
+from repro.core.join import JoinStats
+from repro.core.plan import JoinPlan, JoinPlanner
+from repro.serve.coalescer import ProbeTicket, RequestCoalescer
+from repro.serve.entrypoints import EntrypointCache, pow2_bucket
+from repro.serve.transfer import TransferPool
+
+
+def _probe_step_impl(tokens_r, lengths_r, words_r,
+                     vocab, vocab_tid, post_set, post_pos, post_len, post_key,
+                     probe_tokens, probe_lengths, probe_prefix, lo_r, hi_r,
+                     need_tab,
+                     *, sim: str, tau: float, b: int, method: str, mix: bool,
+                     cap: int, lp: int, scale: int, cutoff: int, impl: str):
+    """One fused serving step over a coalesced probe batch.
+
+    The same three traced stages as the indexed driver's chunk step
+    (:func:`repro.index.candidates._indexed_chunk_step`), with two serving
+    additions: probe bitmap words are generated *inside* the step (one
+    fusion, no separate upload), and the bitmap-survivor / verified masks
+    are segment-summed per probe row so per-request funnel counters can be
+    recovered from the merged batch exactly.
+    """
+    import jax.numpy as jnp
+
+    from repro.index.candidates import (dedup_pairs, expand_and_filter,
+                                        verdict_and_verify)
+
+    probe_words = bm.generate_bitmaps(probe_tokens, probe_lengths, b,
+                                      method=method, mix=mix)
+    rr, ss, _n_exp = expand_and_filter(
+        post_set, post_pos, post_len, post_key, vocab, vocab_tid,
+        probe_tokens, probe_lengths, probe_prefix, lo_r, hi_r, jnp.int32(0),
+        sim=sim, tau=tau, cap=cap, lp=lp, scale=scale, self_join=False,
+        impl=impl)
+    cand_r, cand_s, n_gen = dedup_pairs(rr, ss, cap)
+    slot_ok = jnp.arange(cap) < n_gen
+    pairs, _n_bm, n_ok, bm_mask, ok_mask = verdict_and_verify(
+        tokens_r, lengths_r, words_r, probe_tokens, probe_lengths,
+        probe_words, cand_r, cand_s, slot_ok, need_tab, jnp.int32(0),
+        sim=sim, tau=tau, cutoff=cutoff, impl=impl, return_masks=True)
+    cb = probe_tokens.shape[0]
+    safe_s = jnp.where(slot_ok, cand_s, 0)
+    gen_rows = jnp.zeros((cb,), jnp.int32).at[safe_s].add(
+        slot_ok.astype(jnp.int32))
+    bm_rows = jnp.zeros((cb,), jnp.int32).at[safe_s].add(
+        bm_mask.astype(jnp.int32))
+    ok_rows = jnp.zeros((cb,), jnp.int32).at[safe_s].add(
+        ok_mask.astype(jnp.int32))
+    return pairs, n_ok, gen_rows, bm_rows, ok_rows
+
+
+class _FastRequest:
+    """A coalesced-path request inside one merged batch."""
+
+    __slots__ = ("ticket", "offset", "rows", "n_exp", "lp")
+
+    def __init__(self, ticket, offset, rows, n_exp, lp):
+        self.ticket = ticket
+        self.offset = offset
+        self.rows = rows
+        self.n_exp = n_exp
+        self.lp = lp
+
+
+class JoinSession:
+    """A long-lived serving session over one prepared corpus.
+
+    ``probe(batch)`` is the drop-in, single-request path (submit + flush);
+    an online service uses ``submit`` per arrival plus ``poll``/``flush``,
+    letting the coalescer fill padded buckets under its max-batch/max-wait
+    policy.  ``stats_summary()`` is the observability surface: the engine's
+    lifetime funnel rollup plus entrypoint-cache, transfer-pool,
+    min-overlap-cache and coalescing counters.
+    """
+
+    def __init__(self, corpus: Collection | PreparedCollection,
+                 sim: str = JACCARD, tau: float = 0.8, *,
+                 plan: Optional[JoinPlan] = None,
+                 planner: Optional[JoinPlanner] = None,
+                 max_batch: int = 512,
+                 max_wait: float = 0.002,
+                 pipeline_depth: int = 2,
+                 history_limit: Optional[int] = None,
+                 device=None):
+        planner = planner or JoinPlanner()
+        prepared = prepare(corpus)
+        if plan is None:
+            plan = planner.serving_plan(sim, tau, n_r=max(prepared.num_sets, 1))
+        self.plan = plan
+        self.sim = sim
+        self.tau = float(tau)
+        self.engine = JoinEngine(prepared, sim, tau, plan=plan,
+                                 planner=planner, history_limit=history_limit)
+        self.prepared = prepared
+        # Solo-probe parity requires any coalescable request to be a single
+        # driver chunk, so the merge ceiling never exceeds the chunk size.
+        self.coalescer = RequestCoalescer(
+            max_batch=min(int(max_batch), int(plan.block)),
+            max_wait=max_wait)
+        if pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, got "
+                             f"{pipeline_depth}")
+        self.pipeline_depth = int(pipeline_depth)
+        self.entrypoints = EntrypointCache()
+        # depth+1 staging slots: the slot staged for batch N+pipeline_depth
+        # is never one an in-flight batch is still consuming.
+        self.transfer = TransferPool(depth=self.pipeline_depth + 1,
+                                     device=device)
+        self._cap_hints: Dict[Tuple[int, int, int], int] = {}
+        self.requests = 0
+        self.coalesced_requests = 0
+        self.sequential_requests = 0
+        self.coalesced_batches = 0
+        self.flushes = 0
+        self.padded_rows = 0
+        self.real_rows = 0
+
+        # -- resident build: everything corpus-side goes on device now -----
+        self._chosen = (bm.choose_method(self.tau, plan.b)
+                        if plan.method == BITMAP_COMBINED else plan.method)
+        self._cutoff = (expected.cutoff_point(self._chosen, plan.b, self.tau)
+                        if plan.use_cutoff else 1 << 30)
+        self._fast = plan.driver == "indexed" and prepared.num_sets > 0
+        if self._fast:
+            self._post = prepared.postings(sim, self.tau, plan.ell)
+            if self._post.num_postings == 0:
+                self._fast = False
+        if self._fast:
+            self._csr = self._post.device_arrays()
+            self._scale = self._post.max_len + 1
+            self._tokens_r, self._lengths_r = prepared.device_arrays()
+            self._words_r = prepared.bitmap_words(plan.b, self._chosen,
+                                                  mix=plan.mix)
+            self._max_auto = self._default_max_auto()
+
+    @staticmethod
+    def _default_max_auto() -> int:
+        from repro.index.candidates import _MAX_AUTO_CAPACITY
+        return _MAX_AUTO_CAPACITY
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, request: Collection, *,
+               now: Optional[float] = None) -> ProbeTicket:
+        """Queue one probe request; returns its ticket (resolved by the next
+        flush)."""
+        self.requests += 1
+        return self.coalescer.submit(request, now=now)
+
+    def poll(self, now: Optional[float] = None) -> List[ProbeTicket]:
+        """Flush iff the coalescer's max-batch/max-wait policy says so."""
+        if self.coalescer.due(now):
+            return self.flush()
+        return []
+
+    def probe(self, batch: Collection, *,
+              return_stats: bool = True):
+        """Single-request convenience with ``JoinEngine.probe`` semantics
+        (and bit-identical results)."""
+        ticket = self.submit(batch)
+        self.flush()
+        pairs, stats = ticket.result()
+        return (pairs, stats) if return_stats else pairs
+
+    def flush(self) -> List[ProbeTicket]:
+        """Drain the queue: coalesce, dispatch pipelined device batches,
+        scatter per-request results onto the tickets."""
+        groups = self.coalescer.drain()
+        if not groups:
+            return []
+        self.flushes += 1
+        done: List[ProbeTicket] = []
+        inflight: collections.deque = collections.deque()
+        for group in groups:
+            fast, sequential = self._route(group)
+            for ticket in sequential:
+                self._probe_sequential(ticket)
+                done.append(ticket)
+            if fast:
+                # Upload + dispatch now; block on the *oldest* in-flight
+                # batch only once the pipeline is full — upload of batch
+                # N+1 overlaps the join of batch N.
+                inflight.append(self._dispatch(fast))
+                self.coalesced_batches += 1
+                if len(inflight) > self.pipeline_depth:
+                    done.extend(self._complete(inflight.popleft()))
+        while inflight:
+            done.extend(self._complete(inflight.popleft()))
+        return done
+
+    def warm_buckets(self, sample: Sequence[Collection]) -> int:
+        """Pre-compile the coalesced entrypoint ladder before taking traffic.
+
+        A lazy session compiles each (rows, width, lp, cap) bucket on first
+        encounter — on a CPU backend a single XLA compile is ~1000x a flush,
+        so a cold bucket hit mid-traffic stalls every queued request behind
+        it.  Serving systems pre-warm instead: given representative
+        ``sample`` requests, this flushes one synthetic group per
+        power-of-two row bucket up to ``max_batch`` — each rung calibrates
+        its own capacity hint and compiles its entrypoint, so every
+        steady-state group lands on an already-traced entrypoint.  Results
+        are discarded; engine/session counters do advance (warmup is real
+        traffic).
+
+        Returns the number of entrypoints compiled.  Steady-state traffic
+        only compiles again if it exceeds the calibration — wider sets,
+        longer prefixes, or per-group expansions beyond the calibrated cap.
+        """
+        if not self._fast or not sample:
+            return 0
+        before = self.entrypoints.stats()["traces"]
+        mb = self.coalescer.max_batch
+
+        def flush_rows(target: int) -> None:
+            rows = 0
+            i = 0
+            while rows < target:
+                req = sample[i % len(sample)]
+                if req.num_sets == 0 or rows + req.num_sets > target:
+                    i += 1
+                    if i > 4 * len(sample):  # samples can't tile the target
+                        break
+                    continue
+                self.submit(req)
+                rows += req.num_sets
+                i += 1
+            self.flush()
+
+        # Calibrate the cap hint on a full batch first, so the ladder below
+        # compiles every row bucket at the final (largest) capacity.
+        flush_rows(mb)
+        rung = 16  # the dispatch row-bucket floor
+        while rung <= pow2_bucket(mb, floor=16):
+            flush_rows(min(rung, mb))
+            rung *= 2
+        return self.entrypoints.stats()["traces"] - before
+
+    def stats_summary(self) -> Dict[str, object]:
+        """The session's observability rollup (engine funnel totals +
+        serving-layer counters)."""
+        real = max(self.real_rows, 1)
+        return {
+            "engine": self.engine.stats_summary(),
+            "entrypoints": self.entrypoints.stats(),
+            "transfer": self.transfer.stats(),
+            "min_overlap_cache": verify.min_overlap_cache_stats(),
+            "requests": self.requests,
+            "coalesced_requests": self.coalesced_requests,
+            "sequential_requests": self.sequential_requests,
+            "coalesced_batches": self.coalesced_batches,
+            "flushes": self.flushes,
+            "pad_overhead": self.padded_rows / real,
+            "builds": self.prepared.build_counts(),
+        }
+
+    # -- routing -------------------------------------------------------------
+
+    def _route(self, group: Sequence[ProbeTicket]
+               ) -> Tuple[List[_FastRequest], List[ProbeTicket]]:
+        """Split one coalescer group into fast-path requests (with their
+        solo-identical prepass counts) and sequential fallbacks."""
+        if not self._fast:
+            return [], list(group)
+        fast: List[_FastRequest] = []
+        sequential: List[ProbeTicket] = []
+        offset = 0
+        forced = self.plan.capacity
+        for ticket in group:
+            rows = ticket.rows
+            if rows == 0 or rows > self.coalescer.max_batch:
+                sequential.append(ticket)
+                continue
+            n_exp, lp = self._prepass(ticket.request)
+            if n_exp > self._max_auto or (forced is not None
+                                          and n_exp > int(forced)):
+                # A solo probe would escalate this chunk (forced-capacity
+                # overflow or pathological expansion) — run it through the
+                # engine so the dense-fallback stats stay bit-identical.
+                sequential.append(ticket)
+                continue
+            fast.append(_FastRequest(ticket, offset, rows, n_exp, lp))
+            offset += rows
+        return fast, sequential
+
+    def _prepass(self, request: Collection) -> Tuple[int, int]:
+        """The driver's own host count-prepass, per request: exact total
+        postings expansion + this request's max prefix length."""
+        from repro.index.postings import lookup_counts_host
+
+        lengths = request.lengths
+        ps = np.zeros(request.num_sets, dtype=np.int32)
+        nz = lengths > 0
+        if nz.any():
+            ps[nz] = bounds.prefix_length(
+                self.sim, self.tau, lengths[nz].astype(np.int64)
+            ).astype(np.int32)
+        lp = int(ps.max(initial=0))
+        if lp == 0:
+            return 0, 0
+        lo, hi = bounds.length_window_int(self.sim, self.tau, lengths)
+        cnt, _tid, valid = lookup_counts_host(
+            self._post, request.tokens, ps, lo, hi, lp)
+        return int(cnt[valid].sum()), lp
+
+    # -- the coalesced fast path ---------------------------------------------
+
+    def _dispatch(self, fast: List[_FastRequest]) -> dict:
+        rows_total = sum(f.rows for f in fast)
+        cb = pow2_bucket(rows_total, floor=16)
+        width = pow2_bucket(max(f.ticket.request.max_len for f in fast),
+                            floor=8)
+        lp = pow2_bucket(max(f.lp for f in fast), floor=1)
+        width = max(width, lp)
+        n_exp_total = sum(f.n_exp for f in fast)
+        cap = pow2_bucket(max(n_exp_total, 1), floor=128)
+        # Monotone capacity hint per shape bucket: group compositions vary
+        # run to run, and letting every n_exp total pick its own pow2 cap
+        # would keep minting fresh entrypoints (and traces) near bucket
+        # boundaries.  Reusing the largest cap seen for this row bucket
+        # keeps one steady-state entrypoint per bucket without oversizing
+        # small groups (cap slots beyond n_generated are padding, but the
+        # dedup sort still pays for them) — ``warm_buckets`` calibrates one
+        # representative cap per rung before traffic.
+        hint_key = (cb, width, lp)
+        cap = max(cap, self._cap_hints.get(hint_key, 0))
+        self._cap_hints[hint_key] = cap
+
+        tokens = np.full((cb, width), PAD_TOKEN, dtype=np.int32)
+        lengths = np.zeros((cb,), dtype=np.int32)
+        prefix = np.zeros((cb,), dtype=np.int32)
+        lo = np.zeros((cb,), dtype=np.int32)
+        hi = np.zeros((cb,), dtype=np.int32)
+        for f in fast:
+            req = f.ticket.request
+            o, n = f.offset, f.rows
+            tokens[o:o + n, :req.max_len] = req.tokens
+            lengths[o:o + n] = req.lengths
+            nz = req.lengths > 0
+            if nz.any():
+                prefix[o:o + n][nz] = bounds.prefix_length(
+                    self.sim, self.tau, req.lengths[nz].astype(np.int64)
+                ).astype(np.int32)
+            rlo, rhi = bounds.length_window_int(self.sim, self.tau,
+                                                req.lengths)
+            lo[o:o + n] = rlo
+            hi[o:o + n] = rhi
+        self.real_rows += rows_total
+        self.padded_rows += cb - rows_total
+
+        dev = self.transfer.upload((cb, width), [tokens, lengths, prefix,
+                                                 lo, hi])
+        need_tab = verify.min_overlap_table_dev(
+            self.sim, self.tau, self.prepared.max_len, int(width))
+        step = self._entrypoint(cb, width, lp, cap)
+        outputs = step(self._tokens_r, self._lengths_r, self._words_r,
+                       *self._csr, *dev, need_tab)
+        return {"fast": fast, "outputs": outputs}
+
+    def _entrypoint(self, cb: int, width: int, lp: int, cap: int):
+        import jax
+
+        key = ("serve_probe", self.plan.driver, self.sim, self.tau,
+               cb, width, lp, cap)
+        statics = dict(sim=self.sim, tau=self.tau, b=self.plan.b,
+                       method=self._chosen, mix=self.plan.mix, cap=cap,
+                       lp=lp, scale=self._scale, cutoff=int(self._cutoff),
+                       impl=self.plan.impl)
+        cache = self.entrypoints
+
+        def build():
+            def fn(*args):
+                cache.note_trace(key)   # trace-time only: the retrace proof
+                return _probe_step_impl(*args, **statics)
+            return jax.jit(fn)
+
+        return cache.get(key, build)
+
+    def _complete(self, ctx: dict) -> List[ProbeTicket]:
+        pairs_d, n_ok, gen_rows, bm_rows, ok_rows = ctx["outputs"]
+        k = int(n_ok)                       # blocks on the step's results
+        pairs = np.asarray(pairs_d)[:k]
+        gen_rows = np.asarray(gen_rows)
+        bm_rows = np.asarray(bm_rows)
+        ok_rows = np.asarray(ok_rows)
+        gi = (self.prepared.order[pairs[:, 0]] if k
+              else np.zeros((0,), dtype=np.int64))
+        s = pairs[:, 1] if k else np.zeros((0,), dtype=np.int64)
+        now = time.perf_counter()
+        done = []
+        for f in ctx["fast"]:
+            o, n = f.offset, f.rows
+            m = (s >= o) & (s < o + n)
+            sub = np.stack([gi[m], s[m] - o], axis=1).astype(np.int64)
+            sub = sub[np.lexsort((sub[:, 1], sub[:, 0]))]
+            if f.lp == 0:
+                # A solo probe short-circuits before its chunk loop when no
+                # row has a prefix — all-zero stats, not a "skipped block".
+                stats = JoinStats()
+            else:
+                g = int(gen_rows[o:o + n].sum())
+                stats = JoinStats(
+                    total_pairs=g,
+                    blocks_total=1,
+                    blocks_skipped=int(f.n_exp == 0),
+                    candidates=int(bm_rows[o:o + n].sum()),
+                    verified_true=int(ok_rows[o:o + n].sum()),
+                    candidates_generated=g,
+                    postings_expanded=f.n_exp)
+            t = f.ticket
+            t.pairs, t.stats = sub, stats
+            t.done, t.completed_at, t.route = True, now, "coalesced"
+            self.engine.record_probe(stats)
+            self.coalesced_requests += 1
+            done.append(t)
+        return done
+
+    # -- the sequential fallback ---------------------------------------------
+
+    def _probe_sequential(self, ticket: ProbeTicket) -> None:
+        pairs, stats = self.engine.probe(ticket.request)
+        ticket.pairs, ticket.stats = pairs, stats
+        ticket.done = True
+        ticket.completed_at = time.perf_counter()
+        ticket.route = "sequential"
+        self.sequential_requests += 1

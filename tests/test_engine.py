@@ -307,6 +307,29 @@ def test_engine_probe_streams_batches_without_rebuilds():
     assert (engine.prepared.build_counts(), pb.build_counts()) == before
 
 
+def test_engine_history_capped_but_rollup_counts_all():
+    """history is a bounded deque (resident sessions must not grow without
+    bound) while stats_summary() keeps lifetime totals over every probe."""
+    corpus, batch = _rs_pair(13, n_r=40, n_s=6)
+    engine = JoinEngine(corpus, "jaccard", 0.7, history_limit=3,
+                        planner=JoinPlanner(b=32, block=16, naive_cells=0))
+    stats_seen = []
+    for _ in range(5):
+        _, s = engine.probe(batch)
+        stats_seen.append(s)
+    assert engine.probes == 5
+    assert len(engine.history) == 3 and engine.history.maxlen == 3
+    assert list(engine.history) == stats_seen[-3:]  # newest kept
+    summary = engine.stats_summary()
+    assert summary["probes"] == 5
+    assert summary["history_len"] == 3 and summary["history_limit"] == 3
+    # lifetime rollup sums ALL 5 probes, not just the surviving history
+    assert summary["total_pairs"] == 5 * stats_seen[0].total_pairs
+    assert summary["candidates"] == 5 * stats_seen[0].candidates
+    assert 0.0 <= summary["filter_ratio"] <= 1.0
+    assert 0.0 <= summary["precision"] <= 1.0
+
+
 def test_engine_naive_plan_and_self_join():
     col = _collection(12, n=20)
     engine = JoinEngine(col, "jaccard", 0.6)  # tiny -> naive plan

@@ -199,3 +199,96 @@ def test_main_ratio_env(tmp_path, monkeypatch):
     monkeypatch.delenv(perf_gate.WAIVE_ENV, raising=False)
     monkeypatch.setenv(perf_gate.RATIO_ENV, "1.5")
     assert perf_gate.main([f"--trajectory={p}"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# latency fields + field-based gating (serving rows)
+# ---------------------------------------------------------------------------
+
+def test_row_latency_fields_round_trip(tmp_path):
+    p = str(tmp_path / "traj.json")
+    rows = [Row("serve_sustained_n600", 300.0, "d",
+                stats={"probes_per_sec": 3000.0},
+                p50_us=450.0, p99_us=2100.0),
+            Row("plain_row", 10.0, "d")]
+    append_trajectory(p, rows, smoke=True)
+    with open(p) as f:
+        (entry,) = json.load(f)
+    serve, plain = entry["rows"]
+    assert serve["p50_us"] == 450.0 and serve["p99_us"] == 2100.0
+    assert serve["stats"]["probes_per_sec"] == 3000.0
+    # absent latency fields are omitted, not emitted as null
+    assert "p50_us" not in plain and "p99_us" not in plain
+
+
+def _serve_entry(pps, p99, smoke=True):
+    return {"ts": "t", "rev": "r", "smoke": smoke,
+            "rows": [{"name": "serve_sustained_n600", "us_per_call": 300.0,
+                      "derived": "", "p99_us": p99,
+                      "stats": {"probes_per_sec": pps}}]}
+
+
+def _by_name(verdicts):
+    return {v.name: v for v in verdicts}
+
+
+def test_gate_throughput_inverted_comparison():
+    # throughput DROP fails; us_per_call of the row itself is not gated
+    hist = [_serve_entry(3000.0, 2000.0), _serve_entry(2000.0, 2000.0)]
+    vs = _by_name(perf_gate.check_trajectory(hist, ratio=1.3))
+    v = vs["serve_sustained_n600[stats.probes_per_sec]"]
+    assert v.status == "fail" and v.ratio == pytest.approx(1.5)
+    assert v.baseline_us == 3000.0 and v.unit == "/s"
+    # throughput INCREASE (ratio < 1) passes
+    hist = [_serve_entry(3000.0, 2000.0), _serve_entry(4000.0, 2000.0)]
+    vs = _by_name(perf_gate.check_trajectory(hist, ratio=1.3))
+    assert vs["serve_sustained_n600[stats.probes_per_sec]"].status == "ok"
+
+
+def test_gate_throughput_baseline_is_best_prior():
+    # one slow prior must not lower the throughput bar
+    hist = [_serve_entry(3000.0, 2000.0), _serve_entry(500.0, 2000.0),
+            _serve_entry(2900.0, 2000.0)]
+    vs = _by_name(perf_gate.check_trajectory(hist, ratio=1.3))
+    v = vs["serve_sustained_n600[stats.probes_per_sec]"]
+    assert v.baseline_us == 3000.0 and v.status == "ok"
+
+
+def test_gate_p99_latency_lower_is_better():
+    # a structural tail regression (> ratio * 1.5 margin) fails
+    hist = [_serve_entry(3000.0, 2000.0), _serve_entry(3000.0, 4200.0)]
+    vs = _by_name(perf_gate.check_trajectory(hist, ratio=1.3))
+    v = vs["serve_sustained_n600[p99_us]"]
+    assert v.status == "fail" and v.ratio == pytest.approx(2.1)
+    # run-to-run p99 jitter inside the margin (1.4x < 1.3 * 1.5) passes
+    hist = [_serve_entry(3000.0, 2000.0), _serve_entry(3000.0, 2800.0)]
+    vs = _by_name(perf_gate.check_trajectory(hist, ratio=1.3))
+    assert vs["serve_sustained_n600[p99_us]"].status == "ok"
+    # the us noise floor applies to latency fields too
+    hist = [_serve_entry(3000.0, 10.0), _serve_entry(3000.0, 45.0)]
+    vs = _by_name(perf_gate.check_trajectory(hist, ratio=1.3))
+    assert vs["serve_sustained_n600[p99_us]"].status == "noise"
+
+
+def test_gate_field_new_without_prior():
+    vs = _by_name(perf_gate.check_trajectory([_serve_entry(3000.0, 2000.0)],
+                                             ratio=1.3))
+    assert vs["serve_sustained_n600[stats.probes_per_sec]"].status == "new"
+    assert vs["serve_sustained_n600[p99_us]"].status == "new"
+
+
+def test_gate_field_absent_is_skipped():
+    # rows without the gated fields (e.g. old entries) produce no verdicts
+    entry = {"ts": "t", "rev": "r", "smoke": True,
+             "rows": [{"name": "serve_sustained_n600", "us_per_call": 1.0,
+                       "derived": ""}]}
+    assert perf_gate.check_trajectory([entry], ratio=1.3) == []
+
+
+def test_main_fails_on_throughput_regression(tmp_path, monkeypatch, capsys):
+    monkeypatch.delenv(perf_gate.WAIVE_ENV, raising=False)
+    monkeypatch.delenv(perf_gate.RATIO_ENV, raising=False)
+    p = _write(tmp_path, [_serve_entry(3000.0, 2000.0),
+                          _serve_entry(1000.0, 2000.0)])
+    assert perf_gate.main([f"--trajectory={p}"]) == 1
+    assert "probes_per_sec" in capsys.readouterr().out
