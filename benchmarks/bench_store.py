@@ -1,0 +1,202 @@
+"""Appendable corpus store: append latency, delta-fraction probe tax,
+compaction amortization.
+
+The store's value proposition is quantitative: ``append`` must cost the
+delta's preparation only (vs re-preparing the whole corpus), probes must
+degrade gracefully as the delta fraction grows (each delta adds one small
+segment join), and a compaction must cost about one rebuild while returning
+the probe path to its sealed-base speed.  All three claims are measured —
+and the build-counter contracts behind them asserted — here.
+
+Rows:
+
+* ``store_append_delta`` — µs per ``append()`` (prepares only the delta;
+  perf-gated).
+* ``store_probe_f00 / f10 / f30`` — probe µs at 0% / ~10% / ~30% delta
+  fraction (same batch, same corpus content; perf-gated) — the price of
+  liveness before the compaction policy folds it back.
+* ``store_compact_fold`` — one compaction folding every delta into a new
+  sealed base, with the post-compaction probe returning to f00 speed.
+
+``python -m benchmarks.bench_store --smoke`` runs the CI gate flavour
+(``scripts/check.sh``): N appends never rebuild the base (builds counters),
+and the post-compaction store is bit-identical — pairs and summed funnel
+stats — to a from-scratch rebuild.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import JACCARD, JoinEngine, prepare
+from repro.core.collection import from_lists
+from repro.core.plan import JoinPlan
+from repro.store import CompactionPolicy, CorpusStore
+
+TAU = 0.8
+B = 128
+
+
+def _sets(rng, n, universe=900):
+    sizes = np.maximum(rng.poisson(12, size=n), 1)
+    return [np.unique(rng.integers(0, universe, size=2 * sz + 8))[:sz].tolist()
+            for sz in sizes]
+
+
+def _workload(n_corpus: int, n_delta: int, k_deltas: int, n_batch: int,
+              seed: int = 0):
+    """Corpus + deltas + one probe batch in a shared token universe, with
+    planted corpus rows in the batch and deltas so every join is
+    non-trivial.  One padded width -> one jit cache for every segment."""
+    rng = np.random.default_rng(seed)
+    corpus_sets = _sets(rng, n_corpus)
+    delta_sets = []
+    for k in range(k_deltas):
+        sets = _sets(rng, n_delta)
+        for i in range(min(n_delta // 8, n_corpus)):
+            sets[i] = corpus_sets[(k * 31 + i) % n_corpus]
+        delta_sets.append(sets)
+    batch_sets = _sets(rng, n_batch)
+    for i in range(min(n_batch // 5, n_corpus)):
+        batch_sets[i] = corpus_sets[(7 * i) % n_corpus]
+    width = max(len(s) for group in
+                [corpus_sets, batch_sets] + delta_sets for s in group)
+    return (from_lists(corpus_sets, pad_to=width),
+            [from_lists(s, pad_to=width) for s in delta_sets],
+            from_lists(batch_sets, pad_to=width))
+
+
+def _plan():
+    return JoinPlan(driver="blocked", sim=JACCARD, tau=TAU, b=B, block=2048)
+
+
+def _median_probe(store, batch, repeats=3) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        store.probe(batch)
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def run() -> List[Row]:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    n_corpus, n_delta, n_batch = (600, 30, 100) if smoke else (3000, 150, 400)
+    k = 6  # 3 deltas to ~10% fraction, 3 more to ~30%
+    corpus, deltas, batch = _workload(n_corpus, n_delta, k, n_batch)
+    rows: List[Row] = []
+
+    store = CorpusStore(corpus, JACCARD, TAU, plan=_plan(),
+                        policy=CompactionPolicy.never())
+    t_f00 = _median_probe(store, batch)  # sealed-base baseline (warm jit)
+    base_builds = store.builds()
+
+    # --- append: prepares only the delta ----------------------------------
+    append_times = []
+    for delta in deltas[:3]:
+        t0 = time.perf_counter()
+        store.append(delta, compact=False)
+        append_times.append(time.perf_counter() - t0)
+    t_append = sorted(append_times)[len(append_times) // 2]
+    assert store.builds() == base_builds, (store.builds(), base_builds)
+    t_f10 = _median_probe(store, batch)
+    f10 = store.stats().delta_fraction
+
+    for delta in deltas[3:]:
+        store.append(delta, compact=False)
+    assert store.builds() == base_builds
+    t_f30 = _median_probe(store, batch)
+    f30 = store.stats().delta_fraction
+
+    # --- compaction: one merge buys back the sealed-base probe ------------
+    t0 = time.perf_counter()
+    store.compact()
+    t_compact = time.perf_counter() - t0
+    t_post = _median_probe(store, batch)
+
+    # Amortization frame: a rebuild-per-append regime prepares the whole
+    # corpus k times; the store prepared k deltas + one merge.
+    t0 = time.perf_counter()
+    prepare(store.collection()).bitmap_words(B, "combined", tau=TAU)
+    t_rebuild = time.perf_counter() - t0
+
+    rows.append(Row(
+        "store_append_delta", t_append * 1e6,
+        f"n_delta={n_delta} per_doc={t_append * 1e6 / n_delta:.1f}us "
+        f"full_rebuild={t_rebuild * 1e6:.0f}us "
+        f"rebuild_ratio={t_rebuild / max(t_append, 1e-9):.1f}x"))
+    rows.append(Row(
+        "store_probe_f00", t_f00 * 1e6,
+        f"n={n_corpus} batch={n_batch} sealed base, delta_fraction=0"))
+    rows.append(Row(
+        "store_probe_f10", t_f10 * 1e6,
+        f"delta_fraction={f10:.3f} segments=4 "
+        f"tax={t_f10 / max(t_f00, 1e-9):.2f}x"))
+    rows.append(Row(
+        "store_probe_f30", t_f30 * 1e6,
+        f"delta_fraction={f30:.3f} segments=7 "
+        f"tax={t_f30 / max(t_f00, 1e-9):.2f}x"))
+    rows.append(Row(
+        "store_compact_fold", t_compact * 1e6,
+        f"folded {k} deltas ({k * n_delta} rows) into base "
+        f"post_probe={t_post * 1e6:.0f}us "
+        f"vs_one_rebuild={t_compact / max(t_rebuild, 1e-9):.2f}x"))
+    return rows
+
+
+def run_store_smoke() -> List[Row]:
+    """CI gate (``scripts/check.sh``): across N appends the base is never
+    rebuilt (builds counters), and after a compaction the store is
+    bit-identical — pairs and summed funnel stats — to a from-scratch
+    rebuild of the same rows."""
+    corpus, deltas, batch = _workload(300, 40, 3, 80, seed=7)
+    plan = JoinPlan(driver="blocked", sim=JACCARD, tau=TAU, b=B, block=1024)
+    store = CorpusStore(corpus, JACCARD, TAU, plan=plan,
+                        policy=CompactionPolicy.never())
+    pairs0, _ = store.probe(batch)          # builds the base artifacts
+    base_builds = store.builds()
+    assert base_builds["sort"] == 1 and base_builds["bitmap"] == 1
+
+    for delta in deltas:
+        store.append(delta, compact=False)
+        store.probe(batch)
+    # N appends: the sealed base was never re-sorted or re-hashed.
+    assert store.builds() == base_builds, (store.builds(), base_builds)
+    assert store.stats().delta_count == len(deltas)
+
+    live_pairs, live_stats = store.probe(batch)
+    t0 = time.perf_counter()
+    assert store.compact()
+    t_compact = time.perf_counter() - t0
+    assert store.builds()["sort"] == 1      # a fresh base, built once
+    post_pairs, post_stats = store.probe(batch)
+
+    # Post-compaction bit-identity vs a from-scratch rebuild.
+    oracle = JoinEngine(prepare(store.collection()), JACCARD, TAU, plan=plan)
+    opairs, ostats = oracle.probe(batch)
+    assert np.array_equal(post_pairs, opairs)
+    assert np.array_equal(live_pairs, opairs)   # ...and pre-compaction too
+    for f in ("total_pairs", "candidates", "verified_true",
+              "candidates_generated", "postings_expanded"):
+        assert getattr(post_stats, f) == getattr(ostats, f), f
+        assert getattr(live_stats, f) == getattr(ostats, f), f
+    s = store.stats()
+    assert s.compactions == 1 and s.delta_count == 0
+    return [Row("store_smoke_compact", t_compact * 1e6,
+                f"appends={s.appends} pairs={len(post_pairs)} "
+                f"lifetime_builds={s.lifetime_builds} OK",
+                stats=post_stats.to_dict())]
+
+
+if __name__ == "__main__":
+    import sys
+
+    fn = run_store_smoke if "--smoke" in sys.argv[1:] else run
+    print("name,us_per_call,derived")
+    for r in fn():
+        print(r.csv(), flush=True)

@@ -55,6 +55,8 @@ GATED_PREFIXES = (
     "kernel_entry_filter",
     "kernel_indexed_chunk",
     "kernel_hamming",
+    "store_append",
+    "store_probe",
 )
 # (row-name prefix, field path, direction, margin).  "higher" inverts the
 # comparison: the metric regressing means it *dropped* (throughput);

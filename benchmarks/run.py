@@ -49,6 +49,7 @@ MODULES = [
     "benchmarks.bench_engine",             # prepared-vs-rebuild amortization
     "benchmarks.bench_kernels",            # kernel rooflines (perf gate rows)
     "benchmarks.bench_serve",              # online serving (coalesced probes)
+    "benchmarks.bench_store",              # appendable corpus store (LSM)
 ]
 
 SMOKE_MODULES = [
@@ -57,6 +58,7 @@ SMOKE_MODULES = [
     "benchmarks.bench_engine",
     "benchmarks.bench_kernels",
     "benchmarks.bench_serve",
+    "benchmarks.bench_store",
 ]
 
 

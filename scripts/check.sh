@@ -57,6 +57,11 @@ python -m benchmarks.bench_engine --sharded-smoke
 # throughput is >=2x the per-request path.
 python -m benchmarks.bench_serve --smoke
 
+# Store smoke: N appends onto a CorpusStore never rebuild the sealed base
+# (asserted via build counters), and after a compaction the store's pairs
+# and summed funnel stats are bit-identical to a from-scratch rebuild.
+python -m benchmarks.bench_store --smoke
+
 # Mesh conformance gate: re-run the single driver-conformance suite on an
 # 8-virtual-device harness, so multi-device regressions (ring and
 # sharded-indexed alike) are caught without hardware.  The sharded-indexed

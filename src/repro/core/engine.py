@@ -65,6 +65,12 @@ class PreparedCollection:
         self.inverse = inverse      # original index -> sorted index
         self.tokens = source.tokens[order]    # length-sorted view (numpy)
         self.lengths = source.lengths[order]
+        # Every cached artifact below is derived from the source arrays; an
+        # in-place edit after prepare() would silently serve stale sorts and
+        # bitmaps.  Seal both the source and the sorted copies — growth goes
+        # through new store segments (repro.store), never mutation.
+        for arr in (source.tokens, source.lengths, self.tokens, self.lengths):
+            arr.flags.writeable = False
         self.builds: Dict[str, int] = {
             "sort": 1, "bitmap": 0, "window": 0, "prefix_index": 0,
             "postings": 0, "sharded_postings": 0}
@@ -244,6 +250,15 @@ def prepared_bitmap_filter(
 # JoinEngine: prepare R once, stream probe batches against it
 # ---------------------------------------------------------------------------
 
+def _as_store(corpus):
+    """``corpus`` if it is a :class:`repro.store.CorpusStore`, else None.
+    Imported lazily — :mod:`repro.store` layers *over* this module."""
+    if type(corpus).__name__ != "CorpusStore":
+        return None
+    from repro.store.store import CorpusStore
+    return corpus if isinstance(corpus, CorpusStore) else None
+
+
 @dataclasses.dataclass
 class ProbeResult:
     pairs: np.ndarray       # int64[K, 2] (corpus_index, batch_index)
@@ -265,6 +280,12 @@ class JoinEngine:
     plan on a real mesh; without one, a ring plan falls back to the blocked
     driver and a sharded-indexed plan to its single-device twin ``indexed``
     (both recorded in ``fallbacks``).
+
+    The corpus may also be a :class:`repro.store.CorpusStore` — the engine
+    then adopts the store's plan/sim/tau/mesh and every probe / self-join
+    runs the store's segment-union join (base ∪ deltas), so an appendable
+    corpus drops in wherever a frozen prepared corpus did.  ``prepared``
+    reads through to the store's live base segment across compactions.
     """
 
     #: Default bound on the per-probe ``JoinStats`` history.  A long-lived
@@ -278,17 +299,38 @@ class JoinEngine:
                  expected_batch: Optional[int] = None,
                  mesh=None, axis=None,
                  history_limit: Optional[int] = None):
-        self.prepared = prepare(corpus)
-        self.sim = sim
-        self.tau = float(tau)
-        self._auto_planned = plan is None
+        self.store = _as_store(corpus)
         self._planner = planner or JoinPlanner()
-        if plan is None:
-            plan = self._planner.plan(sim, tau, n_r=self.prepared.num_sets,
-                                      n_s=expected_batch)
-        self.plan = plan
-        self.mesh = mesh
-        self.axis = axis
+        if self.store is not None:
+            store = self.store
+            if (sim, float(tau)) not in ((store.sim, store.tau),
+                                         (JACCARD, 0.8)):
+                raise ValueError(
+                    f"engine asked for (sim={sim}, tau={tau}) but the store "
+                    f"is (sim={store.sim}, tau={store.tau})")
+            if plan is not None and plan != store.plan:
+                raise ValueError(
+                    "engine plan conflicts with the store's plan; the store "
+                    "pins one plan for every segment join")
+            self._prepared = store.base.prepared
+            self.sim = store.sim
+            self.tau = store.tau
+            self.plan = store.plan
+            self._auto_planned = False
+            self.mesh = store.mesh
+            self.axis = store.axis
+        else:
+            self._prepared = prepare(corpus)
+            self.sim = sim
+            self.tau = float(tau)
+            self._auto_planned = plan is None
+            if plan is None:
+                plan = self._planner.plan(sim, tau,
+                                          n_r=self._prepared.num_sets,
+                                          n_s=expected_batch)
+            self.plan = plan
+            self.mesh = mesh
+            self.axis = axis
         self.probes = 0
         if history_limit is None:
             history_limit = self.HISTORY_LIMIT
@@ -297,6 +339,33 @@ class JoinEngine:
         self.history: Deque[object] = collections.deque(maxlen=history_limit)
         self.fallbacks: list = []
         self._totals: Dict[str, int] = collections.defaultdict(int)
+
+    @property
+    def prepared(self) -> PreparedCollection:
+        """The corpus-side artifact: the store's *live* base segment in
+        store mode (compaction swaps it; this property never goes stale),
+        else the prepared corpus the engine was built on."""
+        if self.store is not None:
+            return self.store.base.prepared
+        return self._prepared
+
+    def attach_store(self, store) -> None:
+        """Upgrade a frozen-corpus engine in place to serve ``store``
+        (whose base must be this engine's prepared corpus under the same
+        plan).  History, fallbacks and the lifetime rollup carry over —
+        this is how a resident session absorbs its first ``append()``
+        without resetting observability."""
+        if store.base.prepared is not self._prepared:
+            raise ValueError(
+                "store's base segment is not this engine's prepared corpus")
+        if (store.sim, store.tau) != (self.sim, self.tau):
+            raise ValueError(
+                f"store is (sim={store.sim}, tau={store.tau}) but the engine "
+                f"serves (sim={self.sim}, tau={self.tau})")
+        if store.plan != self.plan:
+            raise ValueError("store plan differs from the engine's plan")
+        self.store = store
+        self._auto_planned = False
 
     # -- public API ----------------------------------------------------------
 
@@ -355,6 +424,14 @@ class JoinEngine:
 
     def _execute(self, batch):
         from repro.core import join as join_mod
+
+        if self.store is not None:
+            # Segment-union join: the store runs base ∪ per-delta joins
+            # through its own per-segment engines (explicit plan, no auto
+            # fallbacks) and sums the funnel counters.
+            if batch is None:
+                return self.store.self_join(return_stats=True)
+            return self.store.probe(batch, return_stats=True)
 
         plan = self.plan
         driver = plan.driver

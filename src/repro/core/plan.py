@@ -42,6 +42,29 @@ DEVICE_DRIVERS = ("naive", "blocked", "ring", "indexed", "sharded-indexed")
 CPU_DRIVERS = ("allpairs", "ppjoin", "groupjoin", "adaptjoin")
 DRIVERS = DEVICE_DRIVERS + CPU_DRIVERS
 
+#: What each driver guarantees when it runs under the segment-union join of
+#: an appendable :class:`repro.store.CorpusStore` (base ∪ deltas vs a
+#: from-scratch rebuild of the same rows):
+#:
+#: * ``"exact"``  — identical pairs AND identical summed funnel counters
+#:   (``total_pairs`` / ``candidates`` / ``verified_true`` /
+#:   ``candidates_generated``; plus ``postings_expanded`` on probes).
+#:   Holds for the device drivers because those fields count per-pair
+#:   predicates, which are invariant under partitioning the join grid by
+#:   segments.
+#: * ``"pairs"``  — identical pairs only.  The CPU algorithms' internal
+#:   counters depend on collection *composition* (adaptjoin picks its
+#:   prefix length per collection, groupjoin groups within a collection),
+#:   so segment sums legitimately differ from the from-scratch run.
+#:
+#: Every driver in :data:`DRIVERS` must appear here — enforced by the
+#: conformance suite (``tests/test_driver_conformance.py``), so a new
+#: driver cannot ship without declaring its store behavior.
+STORE_SUPPORT = {
+    **{d: "exact" for d in DEVICE_DRIVERS},
+    **{d: "pairs" for d in CPU_DRIVERS},
+}
+
 
 def _pow2_at_least(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()

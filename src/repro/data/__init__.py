@@ -8,5 +8,11 @@ from repro.data.collections import (
     with_duplicates,
     zipf_collection,
 )
-from repro.data.dedup import dedup_collection, dedup_documents, shingle
+from repro.data.dedup import (
+    dedup_against,
+    dedup_collection,
+    dedup_documents,
+    dedup_shards,
+    shingle,
+)
 from repro.data.loader import LoaderConfig, SyntheticLMLoader

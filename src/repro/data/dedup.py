@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core.collection import Collection, from_lists
 from repro.core.constants import JACCARD
-from repro.core.engine import PreparedCollection, prepare
+from repro.core.engine import PreparedCollection
 from repro.core.join import blocked_bitmap_join, JoinStats
 
 
@@ -128,13 +128,31 @@ def dedup_against(corpus: Collection | PreparedCollection, new: Collection,
     once and reuse it across calls: the corpus length sort, bitmap words and
     length windows are then built a single time instead of per shard —
     exactly the amortization ``benchmarks/bench_engine.py`` measures.
+
+    ``corpus`` may also be a live :class:`repro.store.CorpusStore`: the
+    R×S join then runs the store's segment-union probe under the *store's*
+    plan (``b``/``block``/``impl``/``compaction`` here only govern the
+    optional within-shard pass), and ``pairs_rs`` column 0 holds
+    store-global document ids — covering documents appended after the
+    store's base was sealed, which is what closes the cross-shard leak in
+    :func:`dedup_shards`.
     """
+    from repro.core.engine import _as_store
+
     if isinstance(new, PreparedCollection):
         # Survivor sub-collections below index ``new`` by original position.
         new = new.source
-    pairs_rs, stats_rs = blocked_bitmap_join(
-        corpus, new, JACCARD, tau, b=b, block=block, impl=impl,
-        compaction=compaction, return_stats=True)
+    store = _as_store(corpus)
+    if store is not None:
+        if store.sim != JACCARD or store.tau != float(tau):
+            raise ValueError(
+                f"store joins at (sim={store.sim}, tau={store.tau}); "
+                f"dedup_against was asked for (jaccard, {tau})")
+        pairs_rs, stats_rs = store.probe(new)
+    else:
+        pairs_rs, stats_rs = blocked_bitmap_join(
+            corpus, new, JACCARD, tau, b=b, block=block, impl=impl,
+            compaction=compaction, return_stats=True)
     dup_vs_corpus = (np.unique(pairs_rs[:, 1]) if len(pairs_rs)
                      else np.zeros((0,), dtype=np.int64))
     mask = np.ones(new.num_sets, dtype=bool)
@@ -155,17 +173,42 @@ def dedup_against(corpus: Collection | PreparedCollection, new: Collection,
 
 
 def dedup_shards(corpus: Collection | PreparedCollection,
-                 shards: Sequence[Collection], tau: float = 0.8,
-                 **kw) -> List[IncrementalDedupResult]:
+                 shards: Sequence[Collection], tau: float = 0.8, *,
+                 return_store: bool = False, policy=None,
+                 **kw):
     """Stream many shards against one corpus, preparing the corpus once.
 
-    The corpus-side artifacts (length sort, packed bitmap words, length
-    windows) are built on the first shard and reused for every subsequent
-    one — the serving shape of :class:`repro.core.engine.JoinEngine` applied
-    to incremental dedup.
+    Each shard is deduped against the *live* corpus — the original base
+    **plus every prior shard's survivors**, which are sealed as
+    :class:`repro.store.CorpusStore` delta segments as the stream advances.
+    (This function used to join each shard against the original corpus
+    only, so a duplicate pair spanning two shards survived in both — the
+    cross-shard leak pinned by ``tests/test_store.py``.)  The base corpus
+    artifacts are still built exactly once across the whole stream (only
+    each small survivor delta is prepared), and the store's compaction
+    ``policy`` decides when deltas fold into a new sealed base.
+
+    Returns the per-shard results, plus the final store when
+    ``return_store=True`` (hand it to ``dedup_against`` / ``JoinEngine`` /
+    ``serve.JoinSession`` to keep streaming).
     """
-    prep = prepare(corpus)
-    return [dedup_against(prep, shard, tau, **kw) for shard in shards]
+    from repro.core.plan import JoinPlan
+    from repro.store import CorpusStore
+
+    plan = JoinPlan(driver="blocked", sim=JACCARD, tau=float(tau),
+                    b=int(kw.get("b", 128)), block=int(kw.get("block", 4096)),
+                    impl=kw.get("impl", "auto"),
+                    compaction=kw.get("compaction", "device"))
+    store = CorpusStore(corpus, JACCARD, float(tau), plan=plan, policy=policy)
+    results: List[IncrementalDedupResult] = []
+    for shard in shards:
+        res = dedup_against(store, shard, tau, **kw)
+        src = shard.source if isinstance(shard, PreparedCollection) else shard
+        if len(res.keep):
+            store.append(Collection(tokens=src.tokens[res.keep],
+                                    lengths=src.lengths[res.keep]))
+        results.append(res)
+    return (results, store) if return_store else results
 
 
 def dedup_documents_against(corpus_texts: Sequence[str],

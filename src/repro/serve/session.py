@@ -25,6 +25,11 @@ upload→join→download — is hoisted out of the request path:
   through the :class:`~repro.serve.transfer.TransferPool` and its step
   dispatched *before* batch N's outputs are fetched, so upload overlaps
   the in-flight join under JAX async dispatch (``pipeline_depth``).
+* **Live corpus** — ``append()`` seals new documents as
+  :mod:`repro.store` delta segments between batches: the warm entrypoints
+  keep serving the untouched base (zero new traces on append), delta
+  results are merged in bit-identically, and only compaction — which
+  swaps the base — rebinds the resident arrays and retraces.
 
 Exactness routing: the coalesced fast path serves a request iff its solo
 probe would run it as a single non-overflowing fused chunk — the session
@@ -123,25 +128,40 @@ class JoinSession:
     min-overlap-cache and coalescing counters.
     """
 
-    def __init__(self, corpus: Collection | PreparedCollection,
-                 sim: str = JACCARD, tau: float = 0.8, *,
+    def __init__(self, corpus, sim: str = JACCARD, tau: float = 0.8, *,
                  plan: Optional[JoinPlan] = None,
                  planner: Optional[JoinPlanner] = None,
                  max_batch: int = 512,
                  max_wait: float = 0.002,
                  pipeline_depth: int = 2,
                  history_limit: Optional[int] = None,
+                 policy=None,
                  device=None):
         planner = planner or JoinPlanner()
-        prepared = prepare(corpus)
-        if plan is None:
-            plan = planner.serving_plan(sim, tau, n_r=max(prepared.num_sets, 1))
+        from repro.core.engine import _as_store
+        self.store = _as_store(corpus)
+        if self.store is not None:
+            # The store pinned one plan for every segment join at its
+            # construction; the session must serve under the same plan or
+            # the exactness contract (session ≡ store ≡ rebuild) breaks.
+            if plan is not None and plan != self.store.plan:
+                raise ValueError("session plan conflicts with the store's")
+            plan = self.store.plan
+            sim, tau = self.store.sim, self.store.tau
+            self._prepared = self.store.base.prepared
+            self.engine = JoinEngine(self.store, history_limit=history_limit)
+        else:
+            self._prepared = prepare(corpus)
+            if plan is None:
+                plan = planner.serving_plan(
+                    sim, tau, n_r=max(self._prepared.num_sets, 1))
+            self.engine = JoinEngine(self._prepared, sim, tau, plan=plan,
+                                     planner=planner,
+                                     history_limit=history_limit)
         self.plan = plan
         self.sim = sim
         self.tau = float(tau)
-        self.engine = JoinEngine(prepared, sim, tau, plan=plan,
-                                 planner=planner, history_limit=history_limit)
-        self.prepared = prepared
+        self._policy = policy
         # Solo-probe parity requires any coalescable request to be a single
         # driver chunk, so the merge ceiling never exceeds the chunk size.
         self.coalescer = RequestCoalescer(
@@ -164,15 +184,30 @@ class JoinSession:
         self.flushes = 0
         self.padded_rows = 0
         self.real_rows = 0
+        self._bind_corpus()
 
-        # -- resident build: everything corpus-side goes on device now -----
+    @property
+    def prepared(self) -> PreparedCollection:
+        """The resident corpus-side artifact: the store's live base segment
+        in store mode (never stale across compactions), else the prepared
+        corpus the session was built on."""
+        if self.store is not None:
+            return self.store.base.prepared
+        return self._prepared
+
+    def _bind_corpus(self) -> None:
+        """(Re)build the resident fast path from the current base segment:
+        everything corpus-side goes on device now.  Called at construction
+        and again only when compaction swaps the base — appends never
+        re-enter here (the no-retrace contract)."""
+        plan, prepared = self.plan, self.prepared
         self._chosen = (bm.choose_method(self.tau, plan.b)
                         if plan.method == BITMAP_COMBINED else plan.method)
         self._cutoff = (expected.cutoff_point(self._chosen, plan.b, self.tau)
                         if plan.use_cutoff else 1 << 30)
         self._fast = plan.driver == "indexed" and prepared.num_sets > 0
         if self._fast:
-            self._post = prepared.postings(sim, self.tau, plan.ell)
+            self._post = prepared.postings(self.sim, self.tau, plan.ell)
             if self._post.num_postings == 0:
                 self._fast = False
         if self._fast:
@@ -187,6 +222,44 @@ class JoinSession:
     def _default_max_auto() -> int:
         from repro.index.candidates import _MAX_AUTO_CAPACITY
         return _MAX_AUTO_CAPACITY
+
+    # -- live corpus ---------------------------------------------------------
+
+    def _ensure_store(self):
+        """Upgrade a frozen-corpus session to an appendable one in place:
+        the current prepared corpus becomes the store's sealed base (no
+        rebuild, no re-upload, no retrace) and the engine carries its
+        history over via ``attach_store``."""
+        if self.store is None:
+            from repro.store import CorpusStore
+            store = CorpusStore(self._prepared, self.sim, self.tau,
+                                plan=self.plan, policy=self._policy)
+            self.engine.attach_store(store)
+            self.store = store
+        return self.store
+
+    def append(self, col: Collection, *, compact: bool | str = "auto"):
+        """Absorb new documents between batches: seal ``col`` as a store
+        delta (preparing only the delta).  Subsequent probes serve base ∪
+        deltas — the warm entrypoints keep serving the untouched base, so
+        appends never retrace.  If the compaction policy fires (or
+        ``compact=True``), the deltas fold into a new base and the resident
+        fast path rebinds to it.  Returns the new segment."""
+        store = self._ensure_store()
+        version = store.base_version
+        seg = store.append(col, compact=compact)
+        if store.base_version != version:
+            self._bind_corpus()
+        return seg
+
+    def compact(self) -> bool:
+        """Explicitly fold the session's deltas into a new sealed base and
+        rebind the resident fast path to it.  Returns whether a merge
+        happened (False on a frozen or delta-free session)."""
+        if self.store is None or not self.store.compact():
+            return False
+        self._bind_corpus()
+        return True
 
     # -- public API ----------------------------------------------------------
 
@@ -301,6 +374,8 @@ class JoinSession:
             "flushes": self.flushes,
             "pad_overhead": self.padded_rows / real,
             "builds": self.prepared.build_counts(),
+            "store": (self.store.stats().to_dict()
+                      if self.store is not None else None),
         }
 
     # -- routing -------------------------------------------------------------
@@ -437,6 +512,7 @@ class JoinSession:
         s = pairs[:, 1] if k else np.zeros((0,), dtype=np.int64)
         now = time.perf_counter()
         done = []
+        live = self.store is not None and bool(self.store.deltas)
         for f in ctx["fast"]:
             o, n = f.offset, f.rows
             m = (s >= o) & (s < o + n)
@@ -456,6 +532,18 @@ class JoinSession:
                     verified_true=int(ok_rows[o:o + n].sum()),
                     candidates_generated=g,
                     postings_expanded=f.n_exp)
+            if live:
+                # The device step served the sealed base; the delta part is
+                # the *same* per-delta engine probes the sequential path
+                # runs, so merged pairs + summed stats stay bit-identical
+                # to ``store.probe`` (base pairs are store-global already —
+                # the base sits at offset 0).
+                from repro.store.store import merge_pairs, sum_stats
+                dpairs, dstats = self.store.probe_deltas(f.ticket.request)
+                if len(dpairs):
+                    sub = merge_pairs([sub, dpairs])
+                if dstats:
+                    stats = sum_stats([stats] + dstats)
             t = f.ticket
             t.pairs, t.stats = sub, stats
             t.done, t.completed_at, t.route = True, now, "coalesced"

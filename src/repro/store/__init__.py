@@ -1,0 +1,26 @@
+"""Appendable corpus store: sealed base + delta segments + LSM compaction
+over the prepared-collection engine."""
+
+from repro.store.store import (
+    FUNNEL_SUM_FIELDS,
+    PROBE_SUM_FIELDS,
+    CompactionPolicy,
+    CorpusStore,
+    Segment,
+    StoreStats,
+    empty_collection,
+    merge_pairs,
+    sum_stats,
+)
+
+__all__ = [
+    "FUNNEL_SUM_FIELDS",
+    "PROBE_SUM_FIELDS",
+    "CompactionPolicy",
+    "CorpusStore",
+    "Segment",
+    "StoreStats",
+    "empty_collection",
+    "merge_pairs",
+    "sum_stats",
+]

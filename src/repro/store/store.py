@@ -1,0 +1,406 @@
+"""The appendable corpus store: delta segments + LSM-style compaction.
+
+Every cached artifact on a :class:`~repro.core.engine.PreparedCollection`
+(length sort, packed bitmap words, CSR postings, sharded slabs) is
+invalidated by any change to its source collection — so the prepared-corpus
+serving story could only serve a *frozen* corpus.  Real dedup-at-scale
+appends continuously.  This module applies the LSM discipline (the same
+reason the candidate-free MapReduce R-S join of arXiv:2506.03893 builds
+filter-and-verification trees: never re-index a side per batch) to the
+engine's build-once artifacts:
+
+* A :class:`CorpusStore` holds one **sealed base segment** — a full
+  ``PreparedCollection`` with all its cached artifacts — plus an ordered
+  list of small **delta segments** (each its own ``PreparedCollection``).
+* :meth:`CorpusStore.append` prepares *only* the new delta.  The base is
+  untouched — provable, not just hoped: the base segment's ``builds``
+  counters never move on append.
+* Every probe / self-join runs the **base join ∪ per-delta joins** (the
+  ``dedup_against`` decomposition): a probe batch joins against every
+  segment independently; a store self-join is each segment's self-join
+  plus every earlier-segment × later-segment R×S join.  Pairs come back in
+  **store-global ids** (append order: base rows first, then each delta),
+  and the funnel :class:`~repro.core.join.JoinStats` are summed across
+  segment joins.
+* A :class:`CompactionPolicy` (delta-count or size-ratio triggered, plus an
+  explicit :meth:`CorpusStore.compact`) folds the deltas into a new sealed
+  base — artifacts are rebuilt **once per merge** instead of once per
+  append.  Global ids are append-ordered, so compaction preserves them.
+
+Exactness contract (enforced by ``tests/test_store.py`` and the store sweep
+in ``tests/test_driver_conformance.py``): at *every* compaction state,
+
+* the store's pair set is **bit-identical** to joining a from-scratch
+  rebuild of the materialized collection with the same plan, and
+* the summed funnel counters (``total_pairs`` / ``candidates`` /
+  ``verified_true`` / ``candidates_generated``, plus ``postings_expanded``
+  for probes) equal the from-scratch join's exactly for the device drivers
+  — those fields count per-pair predicates, so they are invariant under
+  partitioning the grid by segments.  (``blocks_total`` /
+  ``blocks_skipped`` / ``overflow_blocks`` describe the *decomposition*
+  and are summed but not contract-bound; a self-join's
+  ``postings_expanded`` is direction-dependent and likewise exempt.)
+
+Every driver registered in :data:`repro.core.plan.DRIVERS` must declare its
+store behavior in :data:`repro.core.plan.STORE_SUPPORT` (``"exact"`` =
+pairs + funnel sums, ``"pairs"`` = pairs only) — the conformance suite
+fails collection if a new driver ships without a declaration.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.collection import Collection
+from repro.core.constants import JACCARD, PAD_TOKEN
+from repro.core.engine import JoinEngine, PreparedCollection, prepare
+from repro.core.join import JoinStats
+from repro.core.plan import JoinPlan, JoinPlanner
+
+#: JoinStats fields that are per-pair predicates — invariant under the
+#: segment decomposition, so their sums are contract-bound vs a
+#: from-scratch rebuild.  ``postings_expanded`` joins this set for probes
+#: (probe side fixed on both sides of the comparison) but not for
+#: self-joins (a full self-join expands both directions of a symmetric
+#: window; the segmented cross joins expand one).
+FUNNEL_SUM_FIELDS = ("total_pairs", "candidates", "verified_true",
+                     "candidates_generated")
+PROBE_SUM_FIELDS = FUNNEL_SUM_FIELDS + ("postings_expanded",)
+
+
+def sum_stats(stats_list: Sequence[JoinStats]) -> JoinStats:
+    """Field-wise sum of :class:`~repro.core.join.JoinStats` counters."""
+    out = JoinStats()
+    for s in stats_list:
+        for f in dataclasses.fields(JoinStats):
+            setattr(out, f.name, getattr(out, f.name) + getattr(s, f.name))
+    return out
+
+
+def merge_pairs(chunks: Sequence[np.ndarray]) -> np.ndarray:
+    """Concatenate per-segment pair buffers and lexsort into the canonical
+    (col0-major) order every driver emits."""
+    chunks = [c for c in chunks if len(c)]
+    if not chunks:
+        return np.zeros((0, 2), dtype=np.int64)
+    p = np.concatenate(chunks, axis=0).astype(np.int64)
+    return p[np.lexsort((p[:, 1], p[:, 0]))]
+
+
+def empty_collection(max_len: int = 1) -> Collection:
+    """A zero-row collection (the base of a store born empty)."""
+    return Collection(tokens=np.full((0, max(max_len, 1)), PAD_TOKEN,
+                                     dtype=np.int32),
+                      lengths=np.zeros((0,), dtype=np.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """When to fold the delta list into a new sealed base.
+
+    ``max_deltas`` triggers on delta *count* (every delta adds one more
+    segment join per probe); ``size_ratio`` triggers when the delta rows
+    exceed that fraction of the base (LSM size-ratio discipline — the point
+    where one merge amortizes better than many small segment joins).
+    """
+
+    max_deltas: int = 4
+    size_ratio: float = 0.5
+
+    def __post_init__(self):
+        if self.max_deltas < 1:
+            raise ValueError(f"max_deltas must be >= 1, got {self.max_deltas}")
+        if self.size_ratio <= 0:
+            raise ValueError(f"size_ratio must be > 0, got {self.size_ratio}")
+
+    def should_compact(self, base_rows: int,
+                       delta_rows: Sequence[int]) -> bool:
+        if not delta_rows:
+            return False
+        if len(delta_rows) >= self.max_deltas:
+            return True
+        return sum(delta_rows) > self.size_ratio * max(base_rows, 1)
+
+    @classmethod
+    def never(cls) -> "CompactionPolicy":
+        """Auto-compaction disabled; only explicit ``compact()`` merges."""
+        return cls(max_deltas=1 << 30, size_ratio=float("inf"))
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """The store's observability rollup."""
+
+    segments: int            # 1 (base) + live delta count
+    base_rows: int
+    delta_rows: int
+    delta_count: int
+    delta_fraction: float    # delta_rows / max(total rows, 1)
+    appends: int
+    compactions: int
+    probes: int
+    builds: Dict[str, int]           # the LIVE base segment's build counters
+    delta_builds: Dict[str, int]     # summed over live delta segments
+    lifetime_builds: Dict[str, int]  # base + deltas + retired segments
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Segment:
+    """One sealed store segment: a prepared collection at a global-id
+    offset.  ``engine`` is the segment's lazily-built
+    :class:`~repro.core.engine.JoinEngine` (shared plan, cached so repeat
+    probes reuse every segment-side artifact)."""
+
+    __slots__ = ("prepared", "offset", "kind", "_engine")
+
+    def __init__(self, prepared: PreparedCollection, offset: int, kind: str):
+        self.prepared = prepared
+        self.offset = int(offset)
+        self.kind = kind
+        self._engine: Optional[JoinEngine] = None
+
+    @property
+    def rows(self) -> int:
+        return self.prepared.num_sets
+
+    def engine(self, store: "CorpusStore") -> JoinEngine:
+        if self._engine is None:
+            self._engine = JoinEngine(
+                self.prepared, store.sim, store.tau, plan=store.plan,
+                mesh=store.mesh, axis=store.axis)
+        return self._engine
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Segment({self.kind}, offset={self.offset}, "
+                f"rows={self.rows})")
+
+
+class CorpusStore:
+    """An appendable corpus over the prepared-collection engine.
+
+    ``CorpusStore(base, sim, tau)`` seals ``base`` as the store's first
+    segment and resolves one :class:`~repro.core.plan.JoinPlan` shared by
+    every segment join for the store's lifetime (pass ``plan=`` to pin it
+    — the exactness tests compare against a from-scratch rebuild under the
+    *same* plan).  ``append`` adds a delta segment (preparing only the
+    delta), ``probe``/``self_join`` run the segment-union join, and
+    ``compact`` seals everything into a fresh base.
+
+    Documents are addressed by **store-global ids**: the base's original
+    indices first, then each delta's, in append order.  Compaction
+    materializes segments in exactly that order, so global ids survive any
+    number of merges.
+    """
+
+    def __init__(self, base: Collection | PreparedCollection | None = None,
+                 sim: str = JACCARD, tau: float = 0.8, *,
+                 plan: Optional[JoinPlan] = None,
+                 planner: Optional[JoinPlanner] = None,
+                 policy: Optional[CompactionPolicy] = None,
+                 mesh=None, axis=None):
+        if base is None:
+            base = empty_collection()
+        prepared = prepare(base)
+        self.sim = sim
+        self.tau = float(tau)
+        if plan is None:
+            planner = planner or JoinPlanner()
+            plan = planner.plan(sim, self.tau, n_r=max(prepared.num_sets, 1))
+        if plan.sim != sim or plan.tau != self.tau:
+            raise ValueError(
+                f"plan is for (sim={plan.sim}, tau={plan.tau}); the store "
+                f"was asked for (sim={sim}, tau={self.tau})")
+        self.plan = plan
+        self.policy = policy or CompactionPolicy()
+        self.mesh = mesh
+        self.axis = axis
+        self.base = Segment(prepared, 0, "base")
+        self.deltas: List[Segment] = []
+        self.appends = 0
+        self.compactions = 0
+        self.probes = 0
+        #: bumped on every mutation (append or compact)
+        self.version = 0
+        #: bumped only when the base segment is replaced (compaction) — a
+        #: resident consumer (``serve.JoinSession``) rebinds its on-device
+        #: base artifacts iff this moved.
+        self.base_version = 0
+        self._retired_builds: collections.Counter = collections.Counter()
+
+    # -- shape ---------------------------------------------------------------
+
+    def segments(self) -> List[Segment]:
+        return [self.base] + list(self.deltas)
+
+    @property
+    def num_sets(self) -> int:
+        return self.base.rows + sum(d.rows for d in self.deltas)
+
+    def __len__(self) -> int:
+        return self.num_sets
+
+    @property
+    def max_len(self) -> int:
+        return max((s.prepared.source.tokens.shape[1]
+                    for s in self.segments()), default=1)
+
+    # -- mutation ------------------------------------------------------------
+
+    def append(self, col: Collection | PreparedCollection, *,
+               compact: bool | str = "auto") -> Segment:
+        """Seal ``col`` as a new delta segment; only the delta is prepared.
+
+        ``compact="auto"`` (default) lets :attr:`policy` decide whether to
+        fold afterwards; ``True`` forces a merge, ``False`` suppresses it.
+        Returns the new segment (its ``offset`` is the first global id the
+        appended documents received — valid across future compactions).
+        """
+        seg = Segment(prepare(col), self.num_sets, "delta")
+        self.deltas.append(seg)
+        self.appends += 1
+        self.version += 1
+        if compact is True or (
+                compact == "auto" and self.policy.should_compact(
+                    self.base.rows, [d.rows for d in self.deltas])):
+            self.compact()
+        return seg
+
+    def compact(self) -> bool:
+        """Fold every delta into a new sealed base (one artifact rebuild
+        per merge instead of one per append).  No-op without deltas.
+        Returns whether a merge happened."""
+        if not self.deltas:
+            return False
+        for seg in self.segments():
+            self._retired_builds.update(seg.prepared.builds)
+        merged = self.collection()
+        self.base = Segment(prepare(merged), 0, "base")
+        self.deltas = []
+        self.compactions += 1
+        self.version += 1
+        self.base_version += 1
+        return True
+
+    def collection(self) -> Collection:
+        """The materialized union in global-id order (also the compaction
+        input and the from-scratch oracle's input in the exactness tests)."""
+        segs = self.segments()
+        width = self.max_len
+        n = self.num_sets
+        tokens = np.full((n, width), PAD_TOKEN, dtype=np.int32)
+        lengths = np.zeros((n,), dtype=np.int32)
+        for seg in segs:
+            src = seg.prepared.source
+            o, k = seg.offset, seg.rows
+            if k:
+                tokens[o:o + k, :src.tokens.shape[1]] = src.tokens
+                lengths[o:o + k] = src.lengths
+        return Collection(tokens=tokens, lengths=lengths)
+
+    # -- joins ---------------------------------------------------------------
+
+    def probe(self, batch: Collection | PreparedCollection, *,
+              return_stats: bool = True):
+        """Join one batch against every segment; pairs come back as
+        ``(store_global_id, batch_index)`` in the canonical lexsorted order
+        with the funnel counters summed across segment joins."""
+        self.probes += 1
+        if batch.num_sets == 0:
+            out = merge_pairs([]), JoinStats()
+            return out if return_stats else out[0]
+        prep_b = prepare(batch)
+        chunks: List[np.ndarray] = []
+        stats: List[JoinStats] = []
+        for seg in self.segments():
+            if seg.rows == 0:
+                continue
+            p, st = seg.engine(self).probe(prep_b)
+            if len(p):
+                chunks.append(p + np.array([seg.offset, 0], dtype=np.int64))
+            stats.append(st)
+        pairs, total = merge_pairs(chunks), sum_stats(stats)
+        return (pairs, total) if return_stats else pairs
+
+    def probe_deltas(self, batch: Collection | PreparedCollection
+                     ) -> Tuple[np.ndarray, List[JoinStats]]:
+        """The delta part of :meth:`probe` alone — the serving layer fuses
+        the base join on device and adds this on top (bit-identical to the
+        sequential decomposition because these are the *same* per-delta
+        engine probes the sequential path runs)."""
+        if batch.num_sets == 0 or not self.deltas:
+            return merge_pairs([]), []
+        prep_b = prepare(batch)
+        chunks: List[np.ndarray] = []
+        stats: List[JoinStats] = []
+        for seg in self.deltas:
+            if seg.rows == 0:
+                continue
+            p, st = seg.engine(self).probe(prep_b)
+            if len(p):
+                chunks.append(p + np.array([seg.offset, 0], dtype=np.int64))
+            stats.append(st)
+        return merge_pairs(chunks), stats
+
+    def self_join(self, *, return_stats: bool = False):
+        """The whole store joined against itself: each segment's self-join
+        plus every earlier×later segment R×S join (``dedup_against``
+        semantics) — global pair ids, summed stats."""
+        segs = [s for s in self.segments() if s.rows > 0]
+        chunks: List[np.ndarray] = []
+        stats: List[JoinStats] = []
+        for i, seg in enumerate(segs):
+            p, st = seg.engine(self).self_join(return_stats=True)
+            if len(p):
+                chunks.append(p + seg.offset)
+            stats.append(st)
+            for later in segs[i + 1:]:
+                p, st = seg.engine(self).probe(later.prepared)
+                if len(p):
+                    chunks.append(p + np.array([seg.offset, later.offset],
+                                               dtype=np.int64))
+                stats.append(st)
+        pairs, total = merge_pairs(chunks), sum_stats(stats)
+        return (pairs, total) if return_stats else pairs
+
+    # -- observability -------------------------------------------------------
+
+    def builds(self) -> Dict[str, int]:
+        """The live base segment's build counters — ``builds()["sort"]`` /
+        ``builds()["bitmap"]`` staying put across appends is the proof that
+        ``append`` never rebuilds the base."""
+        return dict(self.base.prepared.builds)
+
+    def stats(self) -> StoreStats:
+        delta_rows = sum(d.rows for d in self.deltas)
+        total = self.base.rows + delta_rows
+        delta_builds: collections.Counter = collections.Counter()
+        for d in self.deltas:
+            delta_builds.update(d.prepared.builds)
+        lifetime = collections.Counter(self._retired_builds)
+        lifetime.update(self.base.prepared.builds)
+        lifetime.update(delta_builds)
+        return StoreStats(
+            segments=1 + len(self.deltas),
+            base_rows=self.base.rows,
+            delta_rows=delta_rows,
+            delta_count=len(self.deltas),
+            delta_fraction=delta_rows / max(total, 1),
+            appends=self.appends,
+            compactions=self.compactions,
+            probes=self.probes,
+            builds=self.builds(),
+            delta_builds=dict(delta_builds),
+            lifetime_builds=dict(lifetime),
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"CorpusStore(n={self.num_sets}, base={self.base.rows}, "
+                f"deltas={[d.rows for d in self.deltas]}, "
+                f"plan={self.plan.driver!r}, "
+                f"compactions={self.compactions})")

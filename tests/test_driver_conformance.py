@@ -296,3 +296,82 @@ def test_funnel_invariants_and_batch_permutation(seed, driver, simtau):
     identity = list(range(len(probe_sets)))
     shuffled = list(rng.permutation(len(probe_sets)))
     assert summed(identity) == summed(shuffled), (driver, sim, tau, seed)
+
+
+# ---------------------------------------------------------------------------
+# Store conformance: every registered driver must declare — and honor — its
+# behavior under the appendable store's segment-union join.
+# ---------------------------------------------------------------------------
+
+def test_store_support_fully_declared():
+    """The mutation-over-time registry contract: a driver cannot ship
+    without declaring what the store's decomposition preserves for it
+    ("exact" = pairs + summed funnel, "pairs" = pairs only)."""
+    assert set(plan_mod.STORE_SUPPORT) == set(plan_mod.DRIVERS), (
+        sorted(set(plan_mod.STORE_SUPPORT) ^ set(plan_mod.DRIVERS)))
+    assert set(plan_mod.STORE_SUPPORT.values()) <= {"exact", "pairs"}
+    # The paper-path device drivers all owe the stronger contract.
+    for d in ("naive", "blocked", "ring", "indexed", "sharded-indexed"):
+        assert plan_mod.STORE_SUPPORT[d] == "exact", d
+
+
+def _store_cell(kind):
+    """(base, deltas, probe batch) for the store sweep: one dup-heavy cell
+    sliced so duplicate clusters genuinely span the segment boundaries."""
+    from repro.core.collection import Collection
+
+    col_r, _ = _collections(kind, "self")
+    _, col_s = _collections(kind, "rs")
+
+    def rows(a, b):
+        return Collection(tokens=col_r.tokens[a:b],
+                          lengths=col_r.lengths[a:b])
+
+    return rows(0, 24), [rows(24, 30), rows(30, 36)], col_s
+
+
+@pytest.mark.parametrize("driver", sorted(plan_mod.DRIVERS))
+def test_driver_store_conformance(driver):
+    """One driver across a scripted append/probe/compact schedule × sims ×
+    τ: at every compaction state the store's segment-union join must match
+    a from-scratch rebuild under the same plan — pairs for every driver,
+    summed funnel counters too for the "exact" tier (probe: all five
+    fields; self-join: all but the direction-dependent
+    ``postings_expanded``)."""
+    from repro.store import (FUNNEL_SUM_FIELDS, PROBE_SUM_FIELDS,
+                             CompactionPolicy, CorpusStore)
+
+    level = plan_mod.STORE_SUPPORT[driver]
+    mesh = _mesh() if driver in ("ring", "sharded-indexed") else None
+    axis = "data" if mesh is not None else None
+    base, deltas, batch = _store_cell("dup_heavy")
+    for sim in ("jaccard", "cosine"):
+        for tau in (0.6, 0.75, 0.9):
+            plan = JoinPlan(driver=driver, sim=sim, tau=tau, b=_B,
+                            block=_BLOCK)
+            store = CorpusStore(base, sim, tau, plan=plan, mesh=mesh,
+                                axis=axis, policy=CompactionPolicy.never())
+
+            def check(label):
+                oracle = JoinEngine(prepare(store.collection()), sim, tau,
+                                    plan=plan, mesh=mesh, axis=axis)
+                pairs, stats = store.probe(batch)
+                op, ostats = oracle.probe(batch)
+                assert np.array_equal(pairs, op), (driver, sim, tau, label)
+                sp, sstats = store.self_join(return_stats=True)
+                osp, osstats = oracle.self_join(return_stats=True)
+                assert np.array_equal(sp, osp), (driver, sim, tau, label)
+                if level == "exact":
+                    for f in PROBE_SUM_FIELDS:
+                        assert getattr(stats, f) == getattr(ostats, f), (
+                            driver, sim, tau, label, f)
+                    for f in FUNNEL_SUM_FIELDS:
+                        assert getattr(sstats, f) == getattr(osstats, f), (
+                            driver, sim, tau, label, f)
+
+            for delta in deltas:
+                store.append(delta)
+                check("delta")
+            assert store.builds()["sort"] == 1   # appends never rebuilt R
+            store.compact()
+            check("compacted")
